@@ -1,0 +1,33 @@
+"""Paper Fig. 3: deviance-trace convergence within 6-8 iterations.
+
+Runs Algorithm 1 on all four studies at tol 1e-10 (the paper's criterion)
+and reports the per-iteration objective trace plus the iteration count.
+Paper claim: all studies converge in 6~8 iterations.
+"""
+from __future__ import annotations
+
+from repro.core.newton import secure_fit
+from repro.data.datasets import STUDIES, load_study
+
+
+def run(scale: float = 0.1, protect: str = "gradient"):
+    rows = []
+    for name in STUDIES:
+        study = load_study(name, scale=scale)
+        res = secure_fit(study.parts, lam=study.lam, tol=1e-10,
+                         protect=protect)
+        rows.append({
+            "study": name,
+            "iterations": res.iterations,
+            "converged": res.converged,
+            "deviance_trace": [float(x) for x in res.deviance_trace],
+            "paper_claim": "6-8 iterations at tol 1e-10 (Fig 3)",
+            "pass": res.converged and res.iterations <= 10,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,120 @@
+"""Roofline analysis over the dry-run artifacts (TPU v5e constants).
+
+Reads results/dryrun/<arch>__<shape>__<mesh>.json (written by
+repro.launch.dryrun) and derives, per cell:
+
+    compute_term    = HLO_FLOPs_per_device / peak_FLOPs        [s]
+    memory_term     = HLO_bytes_per_device / HBM_bw            [s]
+    collective_term = collective_bytes_per_device / link_bw    [s]
+
+plus the dominant bottleneck, MODEL_FLOPS (6*N*D train / 2*N*D forward,
+N = active params, D = tokens), and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs.  Numbers come from the trip-count-aware HLO walk
+(launch.hlo_analysis), not XLA's loop-unaware cost_analysis.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (one link assumed per collective hop).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": 4_096 * 256,
+    "prefill_32k": 32_768 * 32,
+    "decode_32k": 128,          # one token per slot per step
+    "long_500k": 1,
+}
+
+
+def model_flops(shape: str, active_params: int) -> float:
+    tokens = SHAPE_TOKENS[shape]
+    mult = 6.0 if shape == "train_4k" else 2.0
+    return mult * active_params * tokens
+
+
+def analyze_cell(rec: dict) -> dict:
+    devices = rec["devices"]
+    h = rec["hlo_analysis"]
+    comp = h["flops_per_device"] / PEAK_FLOPS
+    mem = h["bytes_per_device"] / HBM_BW
+    coll_bytes = sum(h["collective_bytes_per_device"].values())
+    coll = coll_bytes / LINK_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["shape"], rec["model"]["active_params"])
+    hlo_total = h["flops_per_device"] * devices
+    useful = mf / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful compute time over the actual bottleneck time
+    ideal_s = mf / devices / PEAK_FLOPS
+    bound_s = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "variant": rec.get("variant", "baseline"),
+        "compute_s": comp,
+        "memory_s": mem,
+        "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_compute_ratio": useful,
+        "roofline_fraction": ideal_s / bound_s if bound_s else 0.0,
+        "temp_gb_per_device": rec["memory"]["temp_bytes_per_device"] / 2**30,
+        "collective_bytes": coll_bytes,
+    }
+
+
+def run(dryrun_dir: str = "results/dryrun", mesh: str = "singlepod"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "skipped" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "skipped": rec["skipped"]})
+            continue
+        rows.append(analyze_cell(rec))
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | roofline frac | temp GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"N/A (skip) | — | — | — |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['useful_compute_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | "
+            f"{r['temp_gb_per_device']:.1f} |\n"
+        )
+    return "".join(out)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="singlepod")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = run(args.dir, args.mesh)
+    if args.markdown:
+        print(to_markdown(rows))
+    else:
+        print(json.dumps(rows, indent=2))

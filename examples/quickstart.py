@@ -1,0 +1,46 @@
+"""Quickstart: the paper's protocol in ~40 lines of public API.
+
+Five hospitals jointly fit an L2-regularized logistic regression without
+sharing records OR unprotected summary statistics, and verify the result
+matches the pooled centralized fit exactly (paper Fig. 2).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core.newton import centralized_fit, secure_fit
+from repro.core.secure_agg import SecureAggregator
+from repro.core.shamir import ShamirScheme
+from repro.data.synthetic import generate_synthetic
+
+# 1. Five institutions, 2k records each, 8 covariates (Algorithm 3).
+study = generate_synthetic(
+    jax.random.PRNGKey(0), num_institutions=5,
+    records_per_institution=2_000, dim=8,
+)
+
+# 2. Secure fit: summaries are Shamir-shared 2-of-3 across Computation
+#    Centers; only the *global* aggregates are ever reconstructed.
+agg = SecureAggregator(scheme=ShamirScheme(threshold=2, num_shares=3))
+secure = secure_fit(list(study.parts), lam=1.0, protect="gradient",
+                    aggregator=agg)
+
+# 3. Gold standard: pooled IRLS on the concatenated data (no privacy).
+gold = centralized_fit(*study.pooled(), lam=1.0)
+
+r2 = float(np.corrcoef(secure.beta, gold.beta)[0, 1] ** 2)
+print(f"secure fit:    {secure.iterations} iterations, "
+      f"converged={secure.converged}")
+print(f"gold standard: {gold.iterations} iterations")
+print(f"R^2(secure, gold) = {r2:.10f}   (paper Fig 2: 1.00)")
+print(f"max |beta_sec - beta_gold| = "
+      f"{np.max(np.abs(secure.beta - gold.beta)):.2e}")
+print(f"bytes transmitted: {secure.bytes_transmitted:,}")
+assert r2 > 0.999999
+assert secure.iterations <= 10  # paper Fig 3: 6-8
+print("OK")

@@ -1,0 +1,57 @@
+"""Smart-grid analytics with private feature selection (paper §Applications).
+
+Ten utility companies hold household smart-meter features (usage patterns,
+peak-hour ratios, appliance signatures...) and want to jointly learn which
+features predict supply-contract churn — without sharing household records
+or even their per-utility summary statistics (commercially sensitive).
+
+Elastic-net secure fit: the institutions run the *identical* Algorithm-1
+protocol (summaries -> Shamir shares -> share-wise aggregation); only the
+Computation Centers' solver uses the prox-Newton L1 step, so feature
+selection comes at zero extra privacy surface.
+
+  PYTHONPATH=src python examples/smart_grid_selection.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.newton import secure_fit
+from repro.data.partition import partition_rows
+
+# --- synthesize: 24 features, only 6 truly predictive ------------------
+key = jax.random.PRNGKey(11)
+n, d, d_true = 12_000, 24, 6
+k1, k2, k3 = jax.random.split(key, 3)
+X = jnp.concatenate(
+    [jnp.ones((n, 1)), jax.random.normal(k1, (n, d - 1))], axis=1
+)
+beta_true = jnp.zeros((d,)).at[:d_true + 1].set(
+    jax.random.uniform(k2, (d_true + 1,), minval=0.6, maxval=1.4)
+)
+y = jax.random.bernoulli(k3, jax.nn.sigmoid(X @ beta_true)).astype(
+    jnp.float64
+)
+parts = partition_rows(X.astype(jnp.float64), y, 10)  # 10 utilities
+
+# --- secure elastic-net across the 10 utilities ------------------------
+res = secure_fit(parts, lam=0.5, l1=100.0, protect="gradient",
+                 max_iter=60)
+beta = np.asarray(res.beta)
+selected = np.where(np.abs(beta) > 1e-6)[0]
+truth = set(range(d_true + 1))
+
+print(f"converged={res.converged} in {res.iterations} iterations")
+print(f"selected features: {sorted(selected.tolist())}")
+print(f"ground-truth features: {sorted(truth)}")
+recovered = truth & set(selected.tolist())
+spurious = set(selected.tolist()) - truth
+print(f"recovered {len(recovered)}/{len(truth)}; spurious: {len(spurious)}")
+assert len(recovered) >= d_true  # all true signals kept
+assert len(spurious) == 0       # penalty prunes all noise dims
+print("OK — joint feature selection without sharing a single household "
+      "record or per-utility summary")

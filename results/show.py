@@ -1,0 +1,11 @@
+import json, sys
+for f in sys.argv[1:]:
+    r = json.load(open(f))
+    h = r["hlo_analysis"]
+    coll = sum(h["collective_bytes_per_device"].values())
+    print(f'{r["arch"]} {r["shape"]} [{r.get("variant")}] bytes %.3e mem %.1fs flops %.3e (%.2fs) coll %.3e (%.2fs) temp %.1fGB' % (
+        h["bytes_per_device"], h["bytes_per_device"]/819e9,
+        h["flops_per_device"], h["flops_per_device"]/197e12,
+        coll, coll/50e9, r["memory"]["temp_bytes_per_device"]/2**30))
+    for b in h.get("top_byte_buckets", [])[:5]:
+        print("   %.3e  %s" % (b["bytes"], b["bucket"]))

@@ -1,0 +1,127 @@
+"""Checkpoint/restart: atomic, retain-k, optional async writer thread.
+
+npz-per-step with flattened pytree paths; writes go to a temp file and are
+renamed into place (crash-safe).  ``CheckpointManager`` keeps the newest k
+checkpoints, restores the latest on resume, and can hand writes to a
+background thread so the train loop never blocks on disk (async writer
+drains on close()).
+"""
+from __future__ import annotations
+
+import os
+import queue
+import re
+import threading
+
+import jax
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]
+
+_SEP = "||"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":
+            # ml_dtypes (bfloat16 etc.) do not survive npz round-trips;
+            # store as f32 (lossless for bf16) — load_pytree casts back
+            # to the template dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_pytree(tree, path: str):
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load_pytree(template, path: str):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with np.load(path, allow_pickle=False) as data:
+        flat = dict(data)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path_k, leaf in leaves:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k
+        )
+        arr = flat[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, retain: int = 3,
+                 async_writes: bool = False):
+        self.dir = directory
+        self.retain = retain
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue | None = None
+        self._thread = None
+        if async_writes:
+            self._q = queue.Queue()
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            tree, path = item
+            save_pytree(tree, path)
+            self._gc()
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:010d}.npz")
+
+    def save(self, step: int, tree):
+        path = self._path(step)
+        if self._q is not None:
+            # device->host copy happens here so the step can proceed
+            host = jax.tree_util.tree_map(np.asarray, tree)
+            self._q.put((host, path))
+        else:
+            save_pytree(tree, path)
+            self._gc()
+
+    def steps(self):
+        pat = re.compile(r"ckpt_(\d+)\.npz$")
+        out = []
+        for f in os.listdir(self.dir):
+            m = pat.match(f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self):
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, step: int | None = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        return load_pytree(template, self._path(step)), step
+
+    def _gc(self):
+        for s in self.steps()[: -self.retain]:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass
+
+    def close(self):
+        if self._q is not None:
+            self._q.put(None)
+            self._thread.join()

@@ -1,0 +1,16 @@
+"""The paper's own model: L2-regularized logistic regression.
+
+Not a transformer — exposed through the same registry so `--arch
+logreg_paper` selects the paper pipeline in launch/train.py.  The four
+evaluation studies are in repro.data.datasets.
+"""
+from ..models.config import ModelConfig
+
+# Encoded as a degenerate ModelConfig for registry uniformity; the logreg
+# driver reads d (features) from the dataset, not from here.
+CONFIG = ModelConfig(
+    name="logreg-paper", family="logreg",
+    num_layers=0, d_model=84, num_heads=1, num_kv_heads=1,
+    d_ff=0, vocab_size=2, attention="none",
+    paper_ref="DOI 10.1371/journal.pone.0156479",
+)

@@ -1,0 +1,66 @@
+"""Per-(arch, shape) performance presets — the §Perf-validated variants.
+
+The baseline sweep (results/dryrun, variant=baseline) runs every cell with
+the generic TP/FSDP sharding rules.  These presets encode the optimizations
+validated in EXPERIMENTS.md §Perf, keyed by (arch, shape-kind); the
+launcher (`dryrun --optimized`, `train --optimized`) applies them with
+dataclasses.replace.  They are deliberately *job-kind-dependent*: e.g.
+fsdp_only requires the global batch to cover the full mesh (train_4k's 256
+on 256 chips) and would be wrong for decode_32k's batch of 128.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["apply_preset"]
+
+_DENSE_FSDP_OK = {
+    # train_4k cells where global_batch (256) covers the 16x16 mesh and
+    # every block weight has a full-mesh-divisible dim
+    "deepseek-7b", "qwen2.5-32b", "qwen2-72b", "h2o-danube-3-4b",
+    "musicgen-medium", "llava-next-34b",
+}
+
+
+def apply_preset(cfg, shape):
+    """Return cfg with the validated perf preset for this cell applied."""
+    kv = {}
+    # flash backward: strictly better for any training cell with attention
+    if shape.kind == "train" and cfg.mixer in ("attn", "rglru_hybrid"):
+        kv["flash_vjp"] = True
+    # chunk-parallel rwkv recurrence: train + prefill
+    if cfg.mixer == "rwkv6" and shape.kind != "decode":
+        kv["rwkv_chunk"] = 32
+        # batch-parallel rwkv blocks: full-mesh batch sharding when the
+        # batch covers the mesh (train_4k), else dp-batch + FSDP weights —
+        # either way the per-projection TP psums disappear.
+        kv["rwkv_batch_parallel"] = True
+    # FSDP-only (ZeRO-3): dense train cells whose batch covers the mesh
+    if (
+        shape.kind == "train"
+        and cfg.name in _DENSE_FSDP_OK
+        and shape.global_batch % 256 == 0
+    ):
+        kv["fsdp_only"] = True
+    # gradient-accumulation microbatches: cells whose per-device
+    # activation/remat footprint exceeds 16 GB HBM at full batch
+    # NOTE: microbatching is incompatible with fsdp_only (per-microbatch
+    # batch must still cover the full mesh), so the dense-FSDP cells rely
+    # on ZeRO-3 sharding alone.
+    _MICRO = {"qwen3-moe-235b-a22b": 8, "recurrentgemma-9b": 8,
+              "deepseek-v2-lite-16b": 4}
+    if shape.kind == "train" and cfg.name in _MICRO \
+            and not kv.get("fsdp_only"):
+        kv["train_microbatch"] = _MICRO[cfg.name]
+    # MLA absorbed decode: attention in compressed-KV space
+    if shape.kind == "decode" and cfg.attention == "mla":
+        kv["mla_absorb"] = True
+    # context-parallel prefill for windowed attention
+    if (
+        shape.kind == "prefill"
+        and cfg.attention in ("swa", "local")
+        and cfg.mixer == "attn"
+        and shape.seq_len % 16 == 0
+    ):
+        kv["seq_parallel_prefill"] = True
+    return dataclasses.replace(cfg, **kv) if kv else cfg

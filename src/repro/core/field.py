@@ -1,0 +1,188 @@
+"""Prime-field arithmetic for Shamir secret-sharing, TPU-adapted.
+
+The paper computes over an (unspecified) big-integer prime field.  TPUs have
+no 128-bit integer path, so we adapt:
+
+* ``FIELD31``  — single Mersenne prime p = 2**31 - 1.  Elements live in
+  uint64; products of two reduced elements are < 2**62 and never overflow.
+* ``FIELD_WIDE`` — CRT pair (2**31 - 1, 2**31 - 19).  Residues are carried in
+  a leading axis of size 2; every field op is applied per-residue.  The
+  combined modulus M = p1*p2 ~= 4.61e18 gives ~61.9 bits of exact dynamic
+  range for fixed-point aggregates, and M < 2**62 so CRT recombination fits
+  in (u)int64.
+
+All element tensors are uint64 with a leading residue axis ``R`` (R = 1 or 2):
+shape ``(R, *secret_shape)``.  Keeping the axis explicit (instead of a sum
+type) keeps everything jit/vmap/psum friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # uint64 field math requires x64
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FieldSpec",
+    "FIELD31",
+    "FIELD_WIDE",
+    "fadd",
+    "fsub",
+    "fmul",
+    "fneg",
+    "fpow_host",
+    "finv_host",
+    "random_elements",
+    "crt_combine_signed",
+]
+
+P31 = np.uint64(2**31 - 1)
+P31B = np.uint64(2**31 - 19)
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    """A prime field (or CRT product of prime fields) for secret sharing."""
+
+    name: str
+    moduli: tuple[int, ...]  # python ints, each < 2**31
+
+    @property
+    def num_residues(self) -> int:
+        return len(self.moduli)
+
+    @property
+    def modulus_product(self) -> int:
+        m = 1
+        for p in self.moduli:
+            m *= p
+        return m
+
+    @property
+    def max_signed(self) -> int:
+        """Largest magnitude representable as a centered (signed) value."""
+        return (self.modulus_product - 1) // 2
+
+    def moduli_array(self) -> jnp.ndarray:
+        """(R, 1, ..) broadcastable moduli as uint64 (caller reshapes)."""
+        return jnp.asarray(self.moduli, dtype=jnp.uint64)
+
+    def _bcast(self, x: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+        """Moduli broadcast against an element tensor with residue ``axis``."""
+        p = self.moduli_array()
+        shape = [1] * x.ndim
+        shape[axis] = self.num_residues
+        return p.reshape(shape)
+
+
+FIELD31 = FieldSpec("field31", (int(P31),))
+FIELD_WIDE = FieldSpec("field_wide", (int(P31), int(P31B)))
+
+
+def _check(x: jnp.ndarray, field: FieldSpec, axis: int = 0) -> None:
+    if x.dtype != jnp.uint64:
+        raise TypeError(f"field elements must be uint64, got {x.dtype}")
+    if x.shape[axis] != field.num_residues:
+        raise ValueError(
+            f"residue axis {axis} has size {x.shape[axis]} != field residues "
+            f"{field.num_residues}"
+        )
+
+
+def fadd(a: jnp.ndarray, b: jnp.ndarray, field: FieldSpec,
+         residue_axis: int = 0) -> jnp.ndarray:
+    """(a + b) mod p, per residue.  Inputs reduced; sum < 2**32, no overflow."""
+    _check(a, field, residue_axis)
+    return (a + b) % field._bcast(a, residue_axis)
+
+
+def fsub(a: jnp.ndarray, b: jnp.ndarray, field: FieldSpec,
+         residue_axis: int = 0) -> jnp.ndarray:
+    _check(a, field, residue_axis)
+    p = field._bcast(a, residue_axis)
+    return (a + (p - b)) % p
+
+
+def fneg(a: jnp.ndarray, field: FieldSpec, residue_axis: int = 0) -> jnp.ndarray:
+    _check(a, field, residue_axis)
+    p = field._bcast(a, residue_axis)
+    return (p - a) % p
+
+
+def fmul(a: jnp.ndarray, b: jnp.ndarray, field: FieldSpec,
+         residue_axis: int = 0) -> jnp.ndarray:
+    """(a * b) mod p.  Reduced inputs < 2**31 so products fit in uint64."""
+    _check(a, field, residue_axis)
+    return (a * b) % field._bcast(a, residue_axis)
+
+
+def fpow_host(base: int, exp: int, p: int) -> int:
+    return pow(int(base), int(exp), int(p))
+
+
+def finv_host(x: int, p: int) -> int:
+    """Modular inverse via Fermat; host-side (public Lagrange points only)."""
+    if x % p == 0:
+        raise ZeroDivisionError("no inverse of 0")
+    return pow(int(x) % p, p - 2, p)
+
+
+def random_elements(
+    key: jax.Array, shape: tuple[int, ...], field: FieldSpec
+) -> jnp.ndarray:
+    """Uniform random field elements, shape (R, *shape).
+
+    Drawn independently per residue with randint in [0, p_r); exact uniform.
+    """
+    keys = jax.random.split(key, field.num_residues)
+    outs = []
+    for r, p in enumerate(field.moduli):
+        v = jax.random.randint(keys[r], shape, 0, p, dtype=jnp.int64)
+        outs.append(v.astype(jnp.uint64))
+    return jnp.stack(outs, axis=0)
+
+
+def crt_combine_signed(residues: jnp.ndarray, field: FieldSpec) -> jnp.ndarray:
+    """Combine (R, ...) residues into centered signed int64 values.
+
+    For R = 1: center around 0 (values > p/2 map negative).
+    For R = 2: Garner's formula — x = r1 + p1 * ((r2 - r1) * inv(p1) mod p2),
+    all intermediates < 2**62 so uint64/int64 arithmetic is exact, then
+    center around M/2.
+    """
+    _check(residues, field)
+    if field.num_residues == 1:
+        p = jnp.uint64(field.moduli[0])
+        v = residues[0]
+        half = jnp.uint64(field.max_signed)
+        return jnp.where(
+            v <= half, v.astype(jnp.int64), -( (p - v).astype(jnp.int64) )
+        )
+    if field.num_residues != 2:
+        raise NotImplementedError("only 1- or 2-residue fields supported")
+    p1, p2 = field.moduli
+    inv_p1 = finv_host(p1, p2)  # public constant
+    r1, r2 = residues[0], residues[1]
+    u64 = jnp.uint64
+    diff = (r2 + (u64(p2) - r1 % u64(p2))) % u64(p2)  # (r2 - r1) mod p2
+    k = (diff * u64(inv_p1)) % u64(p2)  # < p2 < 2**31
+    x = r1 + u64(p1) * k  # < p1*p2 < 2**62 — exact in uint64
+    m = field.modulus_product
+    half = u64(field.max_signed)
+    neg = -((u64(m) - x).astype(jnp.int64))
+    return jnp.where(x <= half, x.astype(jnp.int64), neg)
+
+
+def lift_signed(values: jnp.ndarray, field: FieldSpec) -> jnp.ndarray:
+    """Map signed int64 values (|v| <= max_signed) to (R, ...) residues."""
+    outs = []
+    for p in field.moduli:
+        pp = jnp.int64(p)
+        r = values % pp  # python-style mod: already in [0, p)
+        outs.append(r.astype(jnp.uint64))
+    return jnp.stack(outs, axis=0)

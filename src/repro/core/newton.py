@@ -1,0 +1,239 @@
+"""Newton-Raphson drivers: centralized gold standard + secure distributed.
+
+``centralized_fit`` is the oracle the paper compares against (Fig. 2's "gold
+standard", i.e. what R's glmnet-style IRLS would produce).  ``secure_fit``
+runs the paper's Algorithm 1: per-institution summaries -> Shamir protection
+-> share-wise aggregation at the Computation Centers -> reconstruction of the
+*global* aggregate only -> Newton update (Eq. 3) -> deviance-based
+convergence check.  Both converge to the same beta (R^2 = 1.00, Fig. 2);
+tests assert this to ~1e-6 which is far below the fixed-point quantization
+we configure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .logreg import LocalSummaries, local_summaries, deviance
+from .secure_agg import SecureAggregator
+
+__all__ = ["FitResult", "newton_step", "prox_newton_step",
+           "centralized_fit", "secure_fit"]
+
+PROTECT_CHOICES = ("none", "gradient", "hessian", "both")
+
+
+@dataclasses.dataclass
+class FitResult:
+    beta: np.ndarray
+    iterations: int
+    converged: bool
+    deviance_trace: list
+    # telemetry for Table 1 style reporting
+    central_seconds: float = 0.0
+    total_seconds: float = 0.0
+    bytes_transmitted: int = 0
+
+
+def newton_step(
+    beta: jnp.ndarray,
+    hessian: jnp.ndarray,
+    gradient: jnp.ndarray,
+    lam: float,
+) -> jnp.ndarray:
+    """Eq. 3: beta + (X^T W X + lam I)^{-1} (g - lam beta).
+
+    Solved via Cholesky (the regularized Hessian is SPD); this is the
+    "securely derive beta_new" step (Algorithm 1, line 15) which operates on
+    *revealed global aggregates* plus public lambda/beta.
+    """
+    d = beta.shape[0]
+    A = hessian + lam * jnp.eye(d, dtype=hessian.dtype)
+    rhs = gradient - lam * beta
+    L = jnp.linalg.cholesky(A)
+    delta = jax.scipy.linalg.cho_solve((L, True), rhs)
+    return beta + delta
+
+
+def _soft_threshold(x, t):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def prox_newton_step(
+    beta: jnp.ndarray,
+    hessian: jnp.ndarray,
+    gradient: jnp.ndarray,
+    lam: float,
+    l1: float,
+    inner_steps: int = 200,
+) -> jnp.ndarray:
+    """Proximal Newton step for elastic-net logistic regression.
+
+    The paper notes L1 support "is also possible" (Materials & Methods);
+    crucially the *institution-side protocol is unchanged* — H_j and g_j
+    are the same secret-shared summaries — only the Computation Centers'
+    solver differs.  We minimize the local quadratic model
+
+        m(b) = -g^T (b - beta) + 1/2 (b - beta)^T H (b - beta)
+               + lam/2 ||b||^2 + l1 ||b||_1
+
+    with FISTA (d x d problem, trivially cheap at the center; runs on
+    *revealed global aggregates* only, like newton_step).  l1 = 0 reduces
+    exactly to the L2 Newton step.
+    """
+    if l1 == 0.0:
+        return newton_step(beta, hessian, gradient, lam)
+    d = beta.shape[0]
+    A = hessian + lam * jnp.eye(d, dtype=hessian.dtype)
+    # Lipschitz constant of the quadratic part
+    L = jnp.linalg.norm(A, 2) + 1e-12
+    # gradient of the smooth part at b: A (b - beta) - g + lam*beta
+    #   (expand: H(b-beta) + lam*b - g ... careful) — derive:
+    #   m_smooth(b) = -g^T(b-beta) + .5 (b-beta)^T H (b-beta) + lam/2 b^T b
+    #   grad = -g + H (b - beta) + lam b
+
+    def grad_smooth(b):
+        return -gradient + hessian @ (b - beta) + lam * b
+
+    def fista(carry, _):
+        b, z, t = carry
+        b_new = _soft_threshold(z - grad_smooth(z) / L, l1 / L)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_new = b_new + ((t - 1.0) / t_new) * (b_new - b)
+        return (b_new, z_new, t_new), None
+
+    (b, _, _), _ = jax.lax.scan(
+        fista, (beta, beta, jnp.asarray(1.0, beta.dtype)), None,
+        length=inner_steps,
+    )
+    return b
+
+
+def centralized_fit(
+    X: jnp.ndarray,
+    y: jnp.ndarray,
+    lam: float = 1.0,
+    tol: float = 1e-10,
+    max_iter: int = 50,
+) -> FitResult:
+    """Gold-standard pooled IRLS (no privacy) for accuracy comparison."""
+    d = X.shape[1]
+    beta = jnp.zeros((d,), dtype=jnp.float64)
+    dev_prev = np.inf
+    trace: list[float] = []
+    converged = False
+    it = 0
+    for it in range(1, max_iter + 1):
+        s = local_summaries(beta, X, y)
+        # regularized objective at the *current* beta (same ordering as the
+        # secure protocol, where dev_j arrives with the summaries)
+        obj = float(s.deviance) + lam * float(jnp.sum(beta**2))
+        trace.append(obj)
+        if abs(dev_prev - obj) < tol * (1.0 + abs(obj)):
+            converged = True
+            break
+        dev_prev = obj
+        beta = newton_step(beta, s.hessian, s.gradient, lam)
+    return FitResult(np.asarray(beta), it, converged, trace)
+
+
+def secure_fit(
+    parts: Sequence[tuple[jnp.ndarray, jnp.ndarray]],
+    lam: float = 1.0,
+    tol: float = 1e-10,
+    max_iter: int = 50,
+    protect: str = "gradient",
+    aggregator: SecureAggregator | None = None,
+    seed: int = 0,
+    l1: float = 0.0,
+) -> FitResult:
+    """Paper Algorithm 1 over S institutions' (X_j, y_j) partitions.
+
+    ``protect`` selects the paper's pragmatic mode: known inference attacks
+    need both H and g, so protecting either blocks them; "both" is the fully
+    encrypted setting; "none" degrades to DataSHIELD-style plain exchange
+    (the insecure baseline the paper improves on, kept for benchmarking).
+    """
+    if protect not in PROTECT_CHOICES:
+        raise ValueError(f"protect must be one of {PROTECT_CHOICES}")
+    agg = aggregator or SecureAggregator()
+    key = jax.random.PRNGKey(seed)
+    d = parts[0][0].shape[1]
+    beta = jnp.zeros((d,), dtype=jnp.float64)
+    dev_prev = np.inf
+    trace: list[float] = []
+    converged = False
+    central_s = 0.0
+    nbytes = 0
+    t_total = time.perf_counter()
+    it = 0
+    for it in range(1, max_iter + 1):
+        # ---- distributed phase (institution-local, Algorithm 1 steps 3-8)
+        locals_: list[LocalSummaries] = [
+            local_summaries(beta, Xj, yj) for Xj, yj in parts
+        ]
+        protected, plain = [], []
+        for s in locals_:
+            tree = {}
+            if protect in ("gradient", "both"):
+                tree["gradient"] = s.gradient
+            if protect in ("hessian", "both"):
+                tree["hessian"] = s.hessian
+            if protect != "none":
+                tree["deviance"] = s.deviance
+            key, sub = jax.random.split(key)
+            protected.append(agg.protect(sub, tree) if tree else {})
+            plain.append(
+                {
+                    k: v
+                    for k, v in s._asdict().items()
+                    if k not in tree and k != "count"
+                }
+            )
+            # telemetry: every share element is a uint64 per residue
+            for leaf in jax.tree_util.tree_leaves(protected[-1]):
+                nbytes += leaf.size * 8
+            for leaf in jax.tree_util.tree_leaves(plain[-1]):
+                nbytes += leaf.size * leaf.dtype.itemsize
+
+        # ---- centralized phase (Computation Centers, steps 11-16)
+        t0 = time.perf_counter()
+        agg_protected = agg.aggregate(protected) if protect != "none" else {}
+        revealed = agg.reveal(agg_protected) if agg_protected else {}
+        summed_plain = {
+            k: sum(pl[k] for pl in plain) for k in plain[0]
+        } if plain[0] else {}
+        global_h = revealed.get("hessian", summed_plain.get("hessian"))
+        global_g = revealed.get("gradient", summed_plain.get("gradient"))
+        global_dev = revealed.get("deviance", summed_plain.get("deviance"))
+        # regularized objective at the current beta (summaries' beta)
+        obj = float(global_dev) + lam * float(jnp.sum(beta**2)) \
+            + 2.0 * l1 * float(jnp.sum(jnp.abs(beta)))
+        trace.append(obj)
+        # convergence threshold cannot be tighter than the fixed-point
+        # quantization of the protected deviances (S institutions x 0.5 ulp)
+        quant_floor = (len(parts) + 1) * 0.5 / agg.codec.scale
+        if abs(dev_prev - obj) < max(tol * (1.0 + abs(obj)), quant_floor):
+            central_s += time.perf_counter() - t0
+            converged = True
+            break
+        dev_prev = obj
+        beta = prox_newton_step(
+            beta,
+            jnp.asarray(global_h, jnp.float64),
+            jnp.asarray(global_g, jnp.float64),
+            lam,
+            l1,
+        )
+        central_s += time.perf_counter() - t0
+    total_s = time.perf_counter() - t_total
+    return FitResult(
+        np.asarray(beta), it, converged, trace,
+        central_seconds=central_s, total_seconds=total_s,
+        bytes_transmitted=nbytes,
+    )

@@ -1,0 +1,268 @@
+"""Algorithm 1 as an explicit multi-party protocol with failure handling.
+
+`newton.secure_fit` is the compact in-process form; this module models the
+*deployment* shape: Institution and ComputationCenter objects exchanging
+messages through a coordinator, with the fault-tolerance features a
+1000-node fleet needs:
+
+* **Straggler mitigation** — each round has a deadline; institutions that
+  miss it are excluded from that round's aggregate (the sums in Eqs. 4-6 are
+  over whoever responded; the Newton iterate remains a valid ascent step on
+  the responding cohort, and late institutions rejoin next round).
+* **Center failure tolerance** — Shamir t-of-w: any t of the w centers can
+  reconstruct, so up to w-t centers may be down in a round with zero effect
+  on the result.
+* **Elastic membership** — institutions may join/leave between rounds; the
+  coordinator re-forms the cohort each iteration.
+* **Checkpoint/restart** — protocol state (beta, iteration, deviance trace,
+  rng) serializes to a dict for repro.checkpoint.
+
+Timing is simulated (per-institution latency draws) so straggler logic is
+deterministic and testable without wall-clock sleeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .logreg import local_summaries
+from .newton import newton_step
+from .secure_agg import SecureAggregator
+
+__all__ = ["Institution", "ComputationCenter", "StudyCoordinator", "RoundReport"]
+
+
+@dataclasses.dataclass
+class Institution:
+    """One data-holding party. Owns (X, y); never exports them."""
+
+    name: str
+    X: jnp.ndarray
+    y: jnp.ndarray
+    # simulated response latency (seconds) used for straggler decisions
+    latency: float = 0.0
+    online: bool = True
+
+    def compute_and_protect(self, beta, protect: str, agg: SecureAggregator,
+                            key):
+        s = local_summaries(beta, self.X, self.y)
+        tree = {"deviance": s.deviance, "count": s.count.astype(jnp.float64)}
+        if protect in ("gradient", "both"):
+            tree["gradient"] = s.gradient
+        if protect in ("hessian", "both"):
+            tree["hessian"] = s.hessian
+        shares = agg.protect(key, tree)
+        plain = {}
+        if protect in ("none", "gradient"):
+            plain["hessian"] = s.hessian
+        if protect in ("none", "hessian"):
+            plain["gradient"] = s.gradient
+        if protect == "none":
+            plain["deviance"] = s.deviance
+            plain["count"] = s.count.astype(jnp.float64)
+            shares = {}
+        return shares, plain
+
+
+@dataclasses.dataclass
+class ComputationCenter:
+    """Holds one share slice of every protected submission."""
+
+    index: int  # 1-based Shamir evaluation point
+    online: bool = True
+    _stash: list = dataclasses.field(default_factory=list)
+
+    def receive(self, share_slice):
+        self._stash.append(share_slice)
+
+    def aggregate_local(self, field):
+        """Algorithm 2 run at this center: share-wise sum of its slices."""
+        from .secure_agg import secure_add
+
+        acc = self._stash[0]
+        for s in self._stash[1:]:
+            acc = secure_add(acc, s, field)
+        self._stash = [acc]
+        return acc
+
+    def clear(self):
+        self._stash = []
+
+
+@dataclasses.dataclass
+class RoundReport:
+    iteration: int
+    responders: list
+    stragglers: list
+    centers_used: list
+    objective: float
+    bytes_transmitted: int
+
+
+class StudyCoordinator:
+    """Drives Algorithm 1 across institutions + centers, fault-tolerantly."""
+
+    def __init__(
+        self,
+        institutions: Sequence[Institution],
+        lam: float = 1.0,
+        protect: str = "gradient",
+        aggregator: SecureAggregator | None = None,
+        num_centers: int | None = None,
+        deadline: float | None = None,
+        min_responders: int = 1,
+        tol: float = 1e-10,
+        seed: int = 0,
+    ):
+        self.institutions = list(institutions)
+        self.lam = lam
+        self.protect = protect
+        self.agg = aggregator or SecureAggregator()
+        w = num_centers or self.agg.scheme.num_shares
+        if w != self.agg.scheme.num_shares:
+            raise ValueError("num_centers must equal scheme.num_shares")
+        self.centers = [ComputationCenter(i + 1) for i in range(w)]
+        self.deadline = deadline
+        self.min_responders = min_responders
+        self.tol = tol
+        self.key = jax.random.PRNGKey(seed)
+        d = self.institutions[0].X.shape[1]
+        self.beta = jnp.zeros((d,), dtype=jnp.float64)
+        self.iteration = 0
+        self.trace: list[float] = []
+        self.reports: list[RoundReport] = []
+        self._obj_prev = np.inf
+        self.converged = False
+
+    # -- fault/elasticity hooks ----------------------------------------------
+    def cohort(self) -> list[Institution]:
+        """Current-round responders: online and under the deadline."""
+        live = [i for i in self.institutions if i.online]
+        if self.deadline is not None:
+            ok = [i for i in live if i.latency <= self.deadline]
+        else:
+            ok = live
+        if len(ok) < self.min_responders:
+            raise RuntimeError(
+                f"only {len(ok)} responders < min {self.min_responders}"
+            )
+        return ok
+
+    def live_centers(self) -> list[ComputationCenter]:
+        up = [c for c in self.centers if c.online]
+        if len(up) < self.agg.scheme.threshold:
+            raise RuntimeError(
+                f"{len(up)} centers < threshold {self.agg.scheme.threshold}; "
+                "aggregate unrecoverable this round"
+            )
+        return up
+
+    def add_institution(self, inst: Institution):
+        self.institutions.append(inst)
+
+    def remove_institution(self, name: str):
+        self.institutions = [i for i in self.institutions if i.name != name]
+
+    # -- one Newton round ------------------------------------------------------
+    def step(self) -> RoundReport:
+        self.iteration += 1
+        cohort = self.cohort()
+        stragglers = [
+            i.name for i in self.institutions
+            if i.online and i not in cohort
+        ]
+        for c in self.centers:
+            c.clear()
+        nbytes = 0
+        plains = []
+        for inst in cohort:
+            self.key, sub = jax.random.split(self.key)
+            shares, plain = inst.compute_and_protect(
+                self.beta, self.protect, self.agg, sub
+            )
+            plains.append(plain)
+            if shares:
+                for w_idx, center in enumerate(self.centers):
+                    if not center.online:
+                        continue  # lost share slice; t-of-w absorbs it
+                    slice_w = jax.tree_util.tree_map(
+                        lambda s, i=w_idx: s[i], shares
+                    )
+                    center.receive(slice_w)
+                    nbytes += sum(
+                        leaf.size * 8
+                        for leaf in jax.tree_util.tree_leaves(slice_w)
+                    )
+            nbytes += sum(
+                leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree_util.tree_leaves(plain)
+            )
+
+        # centers aggregate share-wise (Algorithm 2), then >= t of them
+        # jointly reconstruct the global aggregate only
+        revealed = {}
+        if self.protect != "none":
+            up = self.live_centers()
+            agg_slices = [c.aggregate_local(self.agg.scheme.field) for c in up]
+            points = [c.index for c in up]
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=0), *agg_slices
+            )
+            revealed = self.agg.reveal(stacked, points=points)
+
+        plain_sum = {
+            k: sum(pl[k] for pl in plains) for k in plains[0]
+        } if plains and plains[0] else {}
+        merged = {**plain_sum, **revealed}
+        H = jnp.asarray(merged["hessian"], jnp.float64)
+        g = jnp.asarray(merged["gradient"], jnp.float64)
+        dev = float(merged["deviance"])
+
+        obj = dev + self.lam * float(jnp.sum(self.beta**2))
+        self.trace.append(obj)
+        quant_floor = (len(cohort) + 1) * 0.5 / self.agg.codec.scale
+        if abs(self._obj_prev - obj) < max(
+            self.tol * (1.0 + abs(obj)), quant_floor
+        ):
+            self.converged = True
+        else:
+            self._obj_prev = obj
+            self.beta = newton_step(self.beta, H, g, self.lam)
+        report = RoundReport(
+            self.iteration,
+            [i.name for i in cohort],
+            stragglers,
+            [c.index for c in self.centers if c.online],
+            obj,
+            nbytes,
+        )
+        self.reports.append(report)
+        return report
+
+    def run(self, max_iter: int = 50) -> np.ndarray:
+        while not self.converged and self.iteration < max_iter:
+            self.step()
+        return np.asarray(self.beta)
+
+    # -- checkpointing ----------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "beta": np.asarray(self.beta),
+            "iteration": np.asarray(self.iteration),
+            "obj_prev": np.asarray(self._obj_prev),
+            "trace": np.asarray(self.trace),
+            "key": np.asarray(self.key),
+            "converged": np.asarray(self.converged),
+        }
+
+    def load_state_dict(self, state: dict):
+        self.beta = jnp.asarray(state["beta"])
+        self.iteration = int(state["iteration"])
+        self._obj_prev = float(state["obj_prev"])
+        self.trace = [float(x) for x in state["trace"]]
+        self.key = jnp.asarray(state["key"], dtype=jnp.uint32)
+        self.converged = bool(state["converged"])

@@ -1,0 +1,137 @@
+"""Shamir t-of-w secret sharing, vectorized over arbitrary tensors/pytrees.
+
+Implements the paper's protection mechanism (Eq. 7): each secret ``m`` is
+embedded as the constant term of a random degree-(t-1) polynomial
+``q(x) = m + a_1 x + ... + a_{t-1} x^{t-1}`` over a prime field; share ``j``
+is ``(j, q(j))`` for j = 1..w.  Reconstruction is Lagrange interpolation at 0
+using any t shares.  Everything is elementwise over tensors: one independent
+polynomial per tensor element, evaluated with Horner's rule (the TPU-friendly
+form — t-1 fused multiply-adds in uint64, see kernels/shamir_poly.py for the
+Pallas version of the same loop).
+
+Share tensors have shape ``(w, R, *secret_shape)`` where R is the field's
+residue count.  The leading axis is the *holder* (Computation Center) axis —
+in deployment each slice lives at a different center; in our SPMD simulation
+it is carried as a leading dim (or sharded over a mesh axis by the caller).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .field import (
+    FieldSpec,
+    FIELD_WIDE,
+    fadd,
+    fmul,
+    finv_host,
+    random_elements,
+)
+
+__all__ = ["ShamirScheme", "lagrange_coeffs_at_zero"]
+
+
+def lagrange_coeffs_at_zero(
+    points: Sequence[int], field: FieldSpec
+) -> jnp.ndarray:
+    """Public Lagrange weights L_i(0) for reconstruction, per residue.
+
+    Returns (R, len(points)) uint64.  Computed host-side with Python ints —
+    the points are public (they identify Computation Centers), so this leaks
+    nothing and avoids in-graph modular inverses.
+    """
+    out = []
+    for p in field.moduli:
+        row = []
+        for i, xi in enumerate(points):
+            num, den = 1, 1
+            for j, xj in enumerate(points):
+                if i == j:
+                    continue
+                num = (num * xj) % p
+                den = (den * ((xj - xi) % p)) % p
+            row.append((num * finv_host(den, p)) % p)
+        out.append(row)
+    return jnp.asarray(out, dtype=jnp.uint64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShamirScheme:
+    """t-of-w threshold scheme over ``field``."""
+
+    threshold: int = 2  # t: min cooperating centers to reconstruct
+    num_shares: int = 3  # w: total Computation Centers
+    field: FieldSpec = FIELD_WIDE
+
+    def __post_init__(self):
+        if not (1 <= self.threshold <= self.num_shares):
+            raise ValueError("need 1 <= t <= w")
+        if self.num_shares >= min(self.field.moduli):
+            raise ValueError("w must be < field modulus")
+
+    # -- sharing ------------------------------------------------------------
+    def share(self, key: jax.Array, secret: jnp.ndarray) -> jnp.ndarray:
+        """Split field elements (R, ...) into shares (w, R, ...).
+
+        Horner evaluation of the random polynomial at x = 1..w.  Coefficients
+        are fresh uniform field elements per tensor element (information-
+        theoretic hiding below threshold t).
+        """
+        t, w, field = self.threshold, self.num_shares, self.field
+        coeffs = random_elements(key, (t - 1,) + secret.shape[1:], field)
+        # coeffs: (R, t-1, ...) after moving residue axis out front
+        coeffs = jnp.swapaxes(coeffs, 0, 1)  # (t-1, R, ...)
+
+        def eval_at(x: int) -> jnp.ndarray:
+            # q(x) = (..(a_{t-1} x + a_{t-2}) x + ..) x + m, per residue
+            acc = jnp.zeros_like(secret)
+            xs = jnp.full((), x, dtype=jnp.uint64)
+            for k in range(t - 2, -1, -1):
+                acc = fadd(fmul(acc, xs, field), coeffs[k], field)
+            return fadd(fmul(acc, xs, field), secret, field)
+
+        return jnp.stack([eval_at(j) for j in range(1, w + 1)], axis=0)
+
+    # -- reconstruction -----------------------------------------------------
+    def reconstruct(
+        self,
+        shares: jnp.ndarray,
+        points: Sequence[int] | None = None,
+    ) -> jnp.ndarray:
+        """Recover secret (R, ...) from >= t shares (k, R, ...).
+
+        ``points`` are the 1-based holder ids of the provided share slices
+        (default: 1..k).  Any t-subset suffices; extra shares are consistent.
+        """
+        k = shares.shape[0]
+        if points is None:
+            points = list(range(1, k + 1))
+        if len(points) != k:
+            raise ValueError("points must match share count")
+        if k < self.threshold:
+            raise ValueError(
+                f"need >= t={self.threshold} shares, got {k} "
+                "(information-theoretically irrecoverable below threshold)"
+            )
+        lam = lagrange_coeffs_at_zero(points, self.field)  # (R, k)
+        field = self.field
+        acc = jnp.zeros_like(shares[0])
+        for i in range(k):
+            li = lam[:, i].reshape((field.num_residues,) + (1,) * (shares.ndim - 2))
+            acc = fadd(acc, fmul(shares[i], li, field), field)
+        return acc
+
+    # -- pytree convenience ---------------------------------------------------
+    def share_pytree(self, key: jax.Array, tree):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        shared = [self.share(k, leaf) for k, leaf in zip(keys, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, shared)
+
+    def reconstruct_pytree(self, tree, points: Sequence[int] | None = None):
+        return jax.tree_util.tree_map(
+            lambda s: self.reconstruct(s, points), tree
+        )

@@ -1,0 +1,6 @@
+from .synthetic import SyntheticStudy, generate_synthetic
+from .datasets import STUDIES, Study, load_study
+from .partition import partition_rows
+
+__all__ = ["SyntheticStudy", "generate_synthetic", "STUDIES", "Study",
+           "load_study", "partition_rows"]

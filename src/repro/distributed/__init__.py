@@ -1,0 +1,3 @@
+from .sharding import MeshRules, param_pspec, param_shardings
+
+__all__ = ["MeshRules", "param_pspec", "param_shardings"]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), a jit'd wrapper in
+ops.py, and a pure-jnp oracle in ref.py.  Validated in interpret mode on CPU
+(tests/test_kernels.py); written against TPU VMEM/MXU semantics.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: blocked X^T diag(w) X (the paper's Hessian hot spot).
+
+The per-institution Hessian H_j = sum_i w_ii x_i x_i^T dominates local
+compute (O(N d^2) vs O(N d) for everything else).  TPU mapping: stream X
+through VMEM in (block_n, d) tiles, rescale rows by w on the VPU, and feed
+the MXU with (d, block_n) @ (block_n, d) accumulating into a resident
+(d, d) f32 tile.  d is padded to a multiple of 128 by ops.py so both MXU
+matmul dimensions are hardware-aligned; block_n defaults to 512 rows, giving
+a working set of  block_n*d + d*d + block_n  f32 words — < 2 MB for d <= 512,
+comfortably inside the ~16 MB VMEM budget with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gram_hessian_pallas"]
+
+DEFAULT_BLOCK_N = 512
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (block_n, d)
+    xw = x * w_ref[...].astype(jnp.float32)[:, None]
+    # (d, block_n) @ (block_n, d) on the MXU, f32 accumulation
+    o_ref[...] += jax.lax.dot_general(
+        xw, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gram_hessian_pallas(
+    X: jnp.ndarray, w: jnp.ndarray, block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """X: (N, d) with N % block_n == 0 and d % 128 == 0 (ops.py pads).
+
+    interpret=True executes the kernel body on CPU (this container);
+    on real TPU hardware pass interpret=False.
+    """
+    n, d = X.shape
+    assert n % block_n == 0, "caller pads N"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=interpret,
+    )(X, w)

@@ -1,0 +1,166 @@
+"""Jit'd public wrappers around the Pallas kernels (padding, reshaping).
+
+These are what the rest of the framework calls; each has the same signature
+semantics as its pure-jnp oracle in ref.py.  ``interpret`` defaults to True
+because this container is CPU-only; a TPU deployment flips it to False (the
+kernels are written against TPU BlockSpec/VMEM semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fused_logistic import fused_logistic_pallas
+from .gram_hessian import gram_hessian_pallas
+from .shamir_poly import shamir_poly_pallas
+
+__all__ = ["gram_hessian", "fused_logistic", "shamir_shares",
+           "flash_attention", "flash_attention_bwd"]
+
+
+def _pad_to(x, multiple, axis, value=0.0):
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def gram_hessian(X, w, block_n: int = 512, interpret: bool = True):
+    """X^T diag(w) X with automatic N/d padding (padded rows get w = 0)."""
+    n, d = X.shape
+    d_pad = int(np.ceil(d / 128) * 128)
+    bn = min(block_n, int(np.ceil(n / 8) * 8)) if n < block_n else block_n
+    Xp = _pad_to(_pad_to(X, bn, 0), 128, 1)
+    wp = _pad_to(w, bn, 0)  # zero weight rows contribute nothing
+    H = gram_hessian_pallas(Xp, wp, block_n=bn, interpret=interpret)
+    return H[:d, :d]
+
+
+def fused_logistic(beta, X, y, block_n: int = 512, interpret: bool = True):
+    """(g, dev, irls_w) with padding: padded rows have x = 0, y = 0 ->
+    z = 0, p = .5, g contribution 0, dev contribution 2 log 2 (subtracted)."""
+    n, d = X.shape
+    bn = min(block_n, int(np.ceil(n / 8) * 8)) if n < block_n else block_n
+    Xp = _pad_to(_pad_to(X, bn, 0), 128, 1)
+    yp = _pad_to(y, bn, 0)
+    betap = _pad_to(beta, 128, 0)
+    n_pad = Xp.shape[0] - n
+    g, dev, w = fused_logistic_pallas(
+        betap, Xp, yp, block_n=bn, interpret=interpret
+    )
+    dev = dev - 2.0 * jnp.log(2.0) * n_pad
+    return g[:d], dev, w[:n]
+
+
+def shamir_shares(
+    secret: jnp.ndarray,  # (n,) uint32 or uint64, reduced mod modulus
+    coeffs: jnp.ndarray,  # (t-1, n) same dtype, reduced
+    num_shares: int,
+    modulus: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(num_shares, n) shares; 32-bit limb kernel (TPU has no 64-bit VPU)."""
+    assert modulus < 2**31, "kernel field elements must fit 31 bits"
+    n = secret.shape[0]
+    rows = max(1, int(np.ceil(n / 128)))
+    block_rows = min(256, rows)
+    rows_pad = int(np.ceil(rows / block_rows) * block_rows)
+    total = rows_pad * 128
+
+    def to_tile(x):
+        flat = jnp.pad(x.astype(jnp.uint32), (0, total - n))
+        return flat.reshape(rows_pad, 128)
+
+    secret_t = to_tile(secret)
+    coeffs_t = jnp.stack([to_tile(c) for c in coeffs], axis=0)
+    out = shamir_poly_pallas(
+        secret_t, coeffs_t, num_shares, modulus,
+        block_rows=block_rows, interpret=interpret,
+    )
+    return out.reshape(num_shares, total)[:, :n].astype(secret.dtype)
+
+
+def flash_attention(q, k, v, block_q: int = 512, block_k: int = 512,
+                    interpret: bool = True):
+    """Causal GQA flash attention.  q: (B, S, H, D); k/v: (B, S, KVH, D).
+
+    Pads S to a block multiple and D to 128; GQA mapped in the kernel
+    index map (no KV broadcast in HBM).  Same semantics as
+    ref.flash_attention.
+    """
+    from .flash_attention import flash_attention_pallas
+
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    group = H // KVH
+    bq = min(block_q, max(8, int(np.ceil(S / 8) * 8)))
+    bk = min(block_k, bq)
+    s_pad = int(np.ceil(S / max(bq, bk)) * max(bq, bk))
+    d_pad = int(np.ceil(D / 128) * 128)
+
+    def prep(t, heads):
+        t = jnp.pad(t, ((0, 0), (0, s_pad - S), (0, 0), (0, d_pad - D)))
+        return jnp.moveaxis(t, 2, 1).reshape(B * heads, s_pad, d_pad)
+
+    qp, kp, vp = prep(q, H), prep(k, KVH), prep(v, KVH)
+    # padded D columns are zero => contribute nothing to scores; the
+    # kernel normalizes with the true seq_len mask.
+    scale_fix = (d_pad / D) ** 0.5  # kernel scales by d_pad**-0.5
+    o, m, l = flash_attention_pallas(
+        qp * scale_fix, kp, vp, group=group, seq_len=S,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    o = o.reshape(B, H, s_pad, d_pad)[:, :, :S, :D]
+    return jnp.moveaxis(o, 1, 2)
+
+
+def flash_attention_bwd(q, k, v, do, block_q: int = 512,
+                        block_k: int = 512, interpret: bool = True):
+    """Flash backward: (dq, dk, dv) for causal GQA attention.
+
+    q/do: (B, S, H, D); k/v: (B, S, KVH, D).  Re-runs the fwd kernel for
+    (o, m, l) — in a fused deployment those come from the saved forward —
+    then the dq and dk/dv kernels.  Oracle: jax.grad of ref.flash_attention.
+    """
+    from .flash_attention import flash_attention_pallas
+    from .flash_attention_bwd import flash_dkdv_pallas, flash_dq_pallas
+
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    group = H // KVH
+    bq = min(block_q, max(8, int(np.ceil(S / 8) * 8)))
+    bk = min(block_k, bq)
+    s_pad = int(np.ceil(S / max(bq, bk)) * max(bq, bk))
+    d_pad = int(np.ceil(D / 128) * 128)
+
+    def prep(t, heads):
+        t = jnp.pad(t, ((0, 0), (0, s_pad - S), (0, 0), (0, d_pad - D)))
+        return jnp.moveaxis(t, 2, 1).reshape(B * heads, s_pad, d_pad)
+
+    scale_fix = (d_pad / D) ** 0.5
+    qp = prep(q, H) * scale_fix
+    kp, vp, dop = prep(k, KVH), prep(v, KVH), prep(do, H)
+    o, m, l = flash_attention_pallas(
+        qp, kp, vp, group=group, seq_len=S, block_q=bq, block_k=bk,
+        interpret=interpret,
+    )
+    linv = 1.0 / jnp.maximum(l, 1e-30)
+    delta = jnp.sum(dop.astype(jnp.float32) * o.astype(jnp.float32), -1)
+    args = (qp, kp, vp, dop, m, linv, delta)
+    kw = dict(group=group, seq_len=S, block_q=bq, block_k=bk,
+              interpret=interpret)
+    dq = flash_dq_pallas(*args, **kw)
+    dk, dv = flash_dkdv_pallas(*args, **kw)
+
+    def unprep(t, heads):
+        t = t.reshape(B, heads, s_pad, d_pad)[:, :, :S, :D]
+        return jnp.moveaxis(t, 1, 2)
+
+    # undo the d-pad rescale on dq (dq carries one factor of scale)
+    return (unprep(dq, H) * scale_fix, unprep(dk, KVH), unprep(dv, KVH))

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gram_hessian", "fused_logistic", "shamir_shares",
+           "flash_attention"]
+
+
+def gram_hessian(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """X^T diag(w) X in f32 accumulation — the paper's H_j hot spot."""
+    Xw = X.astype(jnp.float32) * w.astype(jnp.float32)[:, None]
+    return jnp.dot(Xw.T, X.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def fused_logistic(beta: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray):
+    """One pass over X -> (gradient, deviance, irls_weights).
+
+    gradient = X^T (y - p); deviance = -2 sum(y z - log(1+e^z));
+    irls_weights = p (1 - p); p = sigmoid(X beta).
+    """
+    Xf = X.astype(jnp.float32)
+    z = Xf @ beta.astype(jnp.float32)
+    p = jax.nn.sigmoid(z)
+    g = Xf.T @ (y.astype(jnp.float32) - p)
+    dev = -2.0 * jnp.sum(y.astype(jnp.float32) * z - jnp.logaddexp(0.0, z))
+    return g, dev, p * (1.0 - p)
+
+
+def shamir_shares(secret: jnp.ndarray, coeffs: jnp.ndarray, num_shares: int,
+                  modulus: int) -> jnp.ndarray:
+    """Horner evaluation of q(x) = secret + sum_k coeffs[k] x^(k+1) at
+    x = 1..num_shares, all mod ``modulus``.  uint64 arithmetic (products of
+    reduced 31-bit values fit).  secret: (n,), coeffs: (t-1, n) uint64.
+    Returns (num_shares, n) uint64.
+    """
+    p = jnp.uint64(modulus)
+    t_minus_1 = coeffs.shape[0]
+
+    def eval_at(x_int):
+        x = jnp.uint64(x_int)
+        acc = jnp.zeros_like(secret)
+        for k in range(t_minus_1 - 1, -1, -1):
+            acc = (acc * x + coeffs[k]) % p
+        return (acc * x + secret) % p
+
+    return jnp.stack([eval_at(j) for j in range(1, num_shares + 1)], axis=0)
+
+
+def flash_attention(q, k, v):
+    """Causal GQA attention oracle: q (B, S, H, D); k/v (B, S, KVH, D).
+
+    Plain materialized-scores softmax in f32 — the ground truth for the
+    Pallas flash kernel (which must match without ever materializing the
+    S x S scores in HBM).
+    """
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qf = q.astype(jnp.float32).reshape(B, S, KVH, G, D) * D**-0.5
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qf, k.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: Shamir share generation in 32-bit limbs.
+
+Share generation evaluates one random degree-(t-1) polynomial per secret
+element at x = 1..w — t-1 fused modular multiply-adds per element, fully
+data-parallel.  The TPU adaptation is the interesting part: the VPU has no
+64-bit integer multiply, so the uint64 reference math does not port.  We
+represent reduced field elements (< 2**31) in uint32 and implement
+
+    mulmod(a, b) mod p,  p = 2**31 - c  (pseudo-Mersenne; c = 1 or 19)
+
+with 16-bit limb decomposition: a = a0 + a1*2**16, b = b0 + b1*2**16, all
+four partial products < 2**32 fit uint32, and each partial is folded with
+x mod p = (x & (2**31-1)) + c * (x >> 31)  (one conditional subtract after).
+Multiplication by the Horner point x <= w (small public constant) only needs
+the b1 < 2**15 case, keeping every intermediate in range.  This replaces the
+big-int field arithmetic a CPU implementation would use — same field, same
+security, MXU/VPU-native word sizes.
+
+Grid: secrets reshaped to (rows, 128) lanes by ops.py; one program per
+(block_rows, 128) tile computes all w shares for its tile (w is small and
+static).  Working set: (t-1 + 1 + w) * block_rows * 128 uint32 words.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["shamir_poly_pallas", "mulmod31", "addmod"]
+
+DEFAULT_BLOCK_ROWS = 256
+MASK31 = np.uint32(2**31 - 1)  # numpy scalar: safe inside pallas kernels
+
+
+def addmod(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:
+    """(a + b) mod p for reduced uint32 inputs (sum < 2**32)."""
+    s = a + b
+    pp = np.uint32(p)
+    return jnp.where(s >= pp, s - pp, s)
+
+
+def _fold(x: jnp.ndarray, p: int, c: int) -> jnp.ndarray:
+    """x mod p for x < 2**32, p = 2**31 - c: fold high bit with weight c."""
+    r = (x & MASK31) + np.uint32(c) * (x >> np.uint32(31))
+    pp = np.uint32(p)
+    r = jnp.where(r >= pp, r - pp, r)  # r < 2**31 + 19*1 after one fold
+    return jnp.where(r >= pp, r - pp, r)
+
+
+def mulmod31(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:
+    """(a * b) mod p via 16-bit limbs, p = 2**31 - c, a,b reduced < p.
+
+    a0b0 < 2**32, cross terms < 2**31 each; shifts are folded with the
+    pseudo-Mersenne identity 2**31 === c (mod p):
+      2**16 * x mod p and 2**32 * x mod p = c * (2 * x) ... handled by
+      iterated folding of (x << 16).
+    """
+    c = 2**31 - p
+    a0 = a & np.uint32(0xFFFF)
+    a1 = a >> np.uint32(16)  # < 2**15
+    b0 = b & np.uint32(0xFFFF)
+    b1 = b >> np.uint32(16)  # < 2**15
+
+    def shl16_mod(x):
+        # (x * 2**16) mod p for reduced x < p: split off top 15 bits
+        hi = x >> np.uint32(15)  # < 2**16
+        lo = x & np.uint32(0x7FFF)  # < 2**15
+        # x*2**16 = hi*2**31 + lo*2**16  ===  hi*c + lo*2**16 (mod p)
+        return _fold((lo << np.uint32(16)) + np.uint32(c) * hi, p, c)
+
+    t00 = _fold(a0 * b0, p, c)  # < 2**32 -> reduced
+    t01 = _fold(a0 * b1, p, c)
+    t10 = _fold(a1 * b0, p, c)
+    t11 = _fold(a1 * b1, p, c)
+    mid = shl16_mod(addmod(t01, t10, p))
+    hi = shl16_mod(shl16_mod(t11))
+    return addmod(addmod(t00, mid, p), hi, p)
+
+
+def _kernel(secret_ref, coeffs_ref, out_ref, *, num_shares, p):
+    t_minus_1 = coeffs_ref.shape[0]
+    secret = secret_ref[...]
+    for j in range(1, num_shares + 1):
+        x = np.uint32(j)
+        acc = jnp.zeros_like(secret)
+        for k in range(t_minus_1 - 1, -1, -1):
+            acc = addmod(mulmod31(acc, x, p), coeffs_ref[k], p)
+        out_ref[j - 1, ...] = addmod(mulmod31(acc, x, p), secret, p)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_shares", "modulus", "block_rows", "interpret")
+)
+def shamir_poly_pallas(
+    secret: jnp.ndarray,  # (rows, 128) uint32, reduced mod modulus
+    coeffs: jnp.ndarray,  # (t-1, rows, 128) uint32, reduced
+    num_shares: int,
+    modulus: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (num_shares, rows, 128) uint32 shares."""
+    rows, lanes = secret.shape
+    assert lanes == 128 and rows % block_rows == 0, "ops.py reshapes/pads"
+    t_minus_1 = coeffs.shape[0]
+    grid = (rows // block_rows,)
+    kernel = functools.partial(_kernel, num_shares=num_shares, p=modulus)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+            pl.BlockSpec((t_minus_1, block_rows, 128), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (num_shares, block_rows, 128), lambda i: (0, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (num_shares, rows, 128), jnp.uint32
+        ),
+        interpret=interpret,
+    )(secret, coeffs)

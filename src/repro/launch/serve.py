@@ -1,0 +1,110 @@
+"""Batched serving driver: prefill + token-by-token decode with KV caches.
+
+Serves any registry architecture (reduced ``--smoke`` config on CPU; the
+full configs are exercised shape-only by launch/dryrun.py).  Demonstrates
+the serving path the decode_32k / long_500k dry-run cells compile:
+
+  prefill(prompt batch) -> caches -> decode_step x new_tokens
+
+Request batching is continuous-lite: a fixed batch of B slots, each slot
+carrying an independent prompt; finished slots are refilled from the queue
+between decode bursts (slot-level batching is what the serve_step lowering
+assumes — the cache layout is slot-major).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_3b --smoke \
+      --requests 12 --batch 4 --prompt-len 32 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--greedy", action="store_true", default=True)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import smoke_config
+    from ..distributed import MeshRules
+    from ..models import transformer as T
+
+    cfg = smoke_config(args.arch)
+    rules = MeshRules(mesh=None)
+    key = jax.random.PRNGKey(args.seed)
+    key, kp = jax.random.split(key)
+    params = T.init_params(kp, cfg)
+    B, P, N = args.batch, args.prompt_len, args.new_tokens
+    cache_len = args.cache_len or (P + N)
+
+    prefill = jax.jit(
+        lambda p, toks: T.prefill(p, cfg, rules, tokens=toks,
+                                  cache_len=cache_len)
+    )
+    decode = jax.jit(
+        lambda p, c, l, t: T.decode_step(p, c, l, cfg, rules, tokens=t)
+    )
+
+    # request queue: each request is an int32 prompt of length P
+    key, kq = jax.random.split(key)
+    prompts = jax.random.randint(
+        kq, (args.requests, P), 0, cfg.vocab_size, dtype=jnp.int32
+    )
+    queue = list(range(args.requests))
+    completed: dict[int, list[int]] = {}
+    t0 = time.perf_counter()
+    tokens_out = 0
+    batches = 0
+    while queue:
+        slot_ids = [queue.pop(0) for _ in range(min(B, len(queue)))]
+        # pad the final partial batch by repeating the last request
+        ids = (slot_ids + [slot_ids[-1]] * B)[:B]
+        batch_prompts = prompts[np.asarray(ids)]
+        logits, caches, length = prefill(params, batch_prompts)
+        outs = [[] for _ in range(B)]
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for s in range(B):
+            outs[s].append(int(tok[s]))
+        for _ in range(N - 1):
+            logits, caches, length = decode(params, caches, length, tok)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for s in range(B):
+                outs[s].append(int(tok[s]))
+        for s, rid in enumerate(slot_ids):
+            completed[rid] = outs[s]
+            tokens_out += len(outs[s])
+        batches += 1
+    dt = time.perf_counter() - t0
+    report = {
+        "arch": cfg.name,
+        "requests": args.requests,
+        "batches": batches,
+        "new_tokens_per_request": N,
+        "tokens_generated": tokens_out,
+        "tokens_per_second": tokens_out / dt,
+        "seconds": dt,
+        "sample_output": completed[0][:8],
+    }
+    print(json.dumps(report, indent=2))
+    return report
+
+
+if __name__ == "__main__":
+    main()

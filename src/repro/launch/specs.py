@@ -1,0 +1,127 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+No device allocation anywhere: params/opt-state/caches come from
+jax.eval_shape; batches are ShapeDtypeStructs.  Sharding choices degrade
+gracefully (an axis is only sharded when its size divides the mesh axis),
+so e.g. long_500k's global_batch=1 falls back to batch replication while
+its KV window still shards over 'model'.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import MeshRules, param_shardings
+from ..models import transformer as T
+from ..models.config import ModelConfig, ShapeConfig
+from ..optim.adamw import adamw_init
+
+__all__ = ["input_specs", "batch_shardings", "cache_pspecs", "train_state_specs"]
+
+
+def _div(n, size):
+    return size > 0 and n % size == 0 and n >= size
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract model inputs for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if shape.kind == "train":
+        batch = {"labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "embeddings":
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.frontend == "embeddings":
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "decode":
+        caches = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+        step = {
+            "length": jax.ShapeDtypeStruct((), i32),
+            "caches": caches,
+        }
+        if cfg.frontend == "embeddings":
+            step["embeds"] = jax.ShapeDtypeStruct((B, cfg.d_model), bf16)
+        else:
+            step["tokens"] = jax.ShapeDtypeStruct((B,), i32)
+        return step
+    raise ValueError(shape.kind)
+
+
+def batch_shardings(specs, rules: MeshRules):
+    """Data-parallel sharding of the token/label/embedding batch."""
+    if rules.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, specs)
+    dp = rules.dp_axes
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return rules.sharding()
+        spec = [None] * leaf.ndim
+        if _div(leaf.shape[0], rules.dp_size):
+            spec[0] = dp
+        return rules.sharding(*spec)
+
+    return jax.tree_util.tree_map(one, specs)
+
+
+def _cache_leaf_pspec(path_str: str, leaf, rules: MeshRules, cfg):
+    """Caches carry (L_seg, B, T/window, ...) leaves.
+
+    Batch shards over dp; the time axis of KV-like leaves shards over
+    'model' (sequence-sharded cache: this is what makes 32k x 128-batch
+    decode fit HBM — see DESIGN.md).
+    """
+    tp = rules.tp_axis
+    spec = [None] * leaf.ndim
+    if leaf.ndim >= 2 and _div(leaf.shape[1], rules.dp_size):
+        spec[1] = rules.dp_axes
+    name = path_str.split("/")[-1]
+    if name in ("k", "v", "ckv", "krope") and leaf.ndim >= 3 and _div(
+        leaf.shape[2], rules.tp_size
+    ):
+        spec[2] = tp
+    if name == "h" and leaf.ndim == 3 and _div(leaf.shape[2],
+                                               rules.tp_size):
+        spec[2] = tp  # RG-LRU state shards over lru channels
+    if name == "conv" and leaf.ndim == 4 and _div(leaf.shape[3],
+                                                  rules.tp_size):
+        spec[3] = tp
+    return P(*spec)
+
+
+def cache_pspecs(cache_abstract, rules: MeshRules, cfg):
+    def path_str(path):
+        return "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+
+    def one(path, leaf):
+        if rules.mesh is None:
+            return None
+        return NamedSharding(
+            rules.mesh, _cache_leaf_pspec(path_str(path), leaf, rules, cfg)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+def train_state_specs(cfg: ModelConfig, rules: MeshRules):
+    """(abstract params, abstract opt state, their shardings)."""
+    params_abs = T.abstract_params(cfg)
+    p_sh = param_shardings(params_abs, rules, cfg)
+    opt_abs = jax.eval_shape(adamw_init, params_abs)
+    if rules.mesh is None:
+        opt_sh = jax.tree_util.tree_map(lambda _: None, opt_abs)
+    else:
+        opt_sh = type(opt_abs)(
+            step=rules.sharding(),
+            mu=param_shardings(opt_abs.mu, rules, cfg),
+            nu=param_shardings(opt_abs.nu, rules, cfg),
+        )
+    return params_abs, p_sh, opt_abs, opt_sh

@@ -1,0 +1,5 @@
+from .config import ModelConfig, ShapeConfig, SHAPES, block_kinds, segments
+from . import attention, kvcache, layers, moe, ssm, transformer
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "block_kinds", "segments",
+           "attention", "kvcache", "layers", "moe", "ssm", "transformer"]

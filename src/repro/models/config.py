@@ -1,0 +1,160 @@
+"""Model/shape configuration dataclasses for the assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "block_kinds"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | ssm | hybrid | moe | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    attention: str = "full"  # full | swa | local | mla | none
+    window: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    mlp_type: str = "swiglu"  # swiglu | gelu
+    # layer pattern: fraction of layers that are attention for hybrids;
+    # explicit kinds are derived in block_kinds()
+    mixer: str = "attn"  # attn | rwkv6 | rglru_hybrid
+    attn_every: int = 0  # for rglru_hybrid: attention layer every N layers
+    # MoE
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_num_shared: int = 0
+    moe_first_dense: int = 0  # leading dense-FFN layers
+    moe_dense_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # MLA
+    mla_kv_lora: int = 0
+    mla_rope_dim: int = 0
+    mla_nope_dim: int = 0
+    mla_v_dim: int = 0
+    # RWKV / RG-LRU
+    rwkv_head_dim: int = 64
+    # chunk length for the chunk-parallel RWKV6 recurrence (0 = per-token
+    # scan, the paper-faithful-style baseline; 16 = GLA-form §Perf variant)
+    rwkv_chunk: int = 0
+    # shard rwkv blocks batch-parallel over (data x model) with FSDP
+    # weights instead of row-parallel TP (kills the per-projection psums
+    # that dominate the collective term; see EXPERIMENTS.md §Perf)
+    rwkv_batch_parallel: bool = False
+    # flash-style custom-VJP attention backward (recompute block scores
+    # instead of autodiff saving them; §Perf)
+    flash_vjp: bool = False
+    # FSDP-only parallelism (ZeRO-3 style): batch sharded over the FULL
+    # mesh, weights row-sharded over the full mesh and gathered per layer,
+    # NO tensor-parallel activation psums.  The right regime whenever the
+    # per-layer weight all-gather is cheaper than 2 activation all-reduces
+    # per layer — true for every dense train_4k cell on the 16x16 mesh
+    # (see EXPERIMENTS.md §Perf).  Dense/GQA archs only (MoE uses EP).
+    fsdp_only: bool = False
+    # sequence-parallel (context-parallel) prefill for windowed-attention
+    # archs: activations S-sharded over the model axis, weights FSDP —
+    # SWA attention only needs a window-sized KV halo from the neighbor
+    # shard (XLA lowers it to collective-permute), killing the per-layer
+    # Megatron activation all-reduces that dominate prefill collectives.
+    seq_parallel_prefill: bool = False
+    # gradient-accumulation microbatches for train_step (activation
+    # memory scales with global_batch / train_microbatch)
+    train_microbatch: int = 1
+    # MLA absorbed decode: attention in the compressed-KV space (no per-
+    # step cache decompression); beyond-paper §Perf variant
+    mla_absorb: bool = False
+    lru_width: int = 0
+    conv_width: int = 4
+    # modality
+    frontend: str = "tokens"  # tokens | embeddings (audio/vlm stub)
+    dtype_str: str = "bfloat16"
+    remat: bool = True
+    paper_ref: str = ""
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_str)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context with O(1)/O(window) state?"""
+        return self.mixer != "attn" or self.attention in ("swa", "local")
+
+    def num_params(self) -> int:
+        """Total parameter count (exact, from the layer definitions)."""
+        from .transformer import count_params  # lazy to avoid cycle
+
+        return count_params(self)
+
+    def active_params(self) -> int:
+        from .transformer import count_params
+
+        return count_params(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def block_kinds(cfg: ModelConfig) -> Tuple[Tuple[str, str], ...]:
+    """Per-layer (mixer_kind, ffn_kind) tuples.
+
+    mixer_kind in {attn, swa, local, mla, rwkv6, rglru};
+    ffn_kind in {dense, dense_big, moe, channelmix}.
+    """
+    kinds = []
+    for i in range(cfg.num_layers):
+        if cfg.mixer == "rwkv6":
+            mixer = "rwkv6"
+        elif cfg.mixer == "rglru_hybrid":
+            mixer = ("local" if cfg.attn_every and (i % cfg.attn_every
+                     == cfg.attn_every - 1) else "rglru")
+        else:
+            mixer = cfg.attention
+        if cfg.moe_num_experts and i >= cfg.moe_first_dense:
+            ffn = "moe"
+        elif cfg.moe_num_experts:
+            ffn = "dense_big"
+        elif cfg.mixer == "rwkv6":
+            ffn = "channelmix"
+        else:
+            ffn = "dense"
+        kinds.append((mixer, ffn))
+    return tuple(kinds)
+
+
+def segments(cfg: ModelConfig):
+    """Group consecutive identical block kinds for lax.scan stacking."""
+    out = []
+    for kind in block_kinds(cfg):
+        if out and out[-1][0] == kind:
+            out[-1][1] += 1
+        else:
+            out.append([kind, 1])
+    return [(tuple(k), n) for k, n in out]

@@ -1,0 +1,70 @@
+"""Decode caches: full KV, ring (windowed) KV, MLA compressed, SSM states.
+
+Cache layout is per-*segment* (see config.segments): every leaf carries a
+leading ``L_seg`` axis so lax.scan over a segment's layers maps over the
+cache in lockstep.  A single scalar ``length`` (tokens written so far) is
+carried globally — slot occupancy and absolute positions are derived from
+it, which keeps ring-buffer bookkeeping out of the cache pytree.
+
+Ring semantics (windowed attention): slot s of a T-slot cache holds the
+most recent position p < length with p % T == s.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_segment_cache", "ring_positions", "write_token"]
+
+
+def ring_positions(length, num_slots: int):
+    """Absolute position per cache slot (-1 if never written).
+
+    length: () int32 tokens written so far.  Works for full caches too
+    (where length <= num_slots always and slot s holds position s).
+    """
+    s = jnp.arange(num_slots, dtype=jnp.int32)
+    last = length - 1 - ((length - 1 - s) % num_slots)
+    return jnp.where(s < jnp.minimum(length, num_slots),
+                     jnp.where(length <= num_slots, s, last), -1)
+
+
+def init_segment_cache(kind, n_layers: int, batch: int, cache_len: int,
+                       cfg, dtype):
+    """Zero cache for one segment.  kind = (mixer_kind, ffn_kind)."""
+    mixer = kind[0]
+    L, B = n_layers, batch
+    Dh = cfg.resolved_head_dim
+    if mixer in ("full", "swa", "local"):
+        T = cache_len if mixer == "full" else min(cfg.window, cache_len)
+        return {
+            "k": jnp.zeros((L, B, T, cfg.num_kv_heads, Dh), dtype),
+            "v": jnp.zeros((L, B, T, cfg.num_kv_heads, Dh), dtype),
+        }
+    if mixer == "mla":
+        return {
+            "ckv": jnp.zeros((L, B, cache_len, cfg.mla_kv_lora), dtype),
+            "krope": jnp.zeros((L, B, cache_len, cfg.mla_rope_dim), dtype),
+        }
+    if mixer == "rwkv6":
+        H, D = cfg.num_heads, cfg.rwkv_head_dim
+        return {
+            "state": jnp.zeros((L, B, H, D, D), jnp.float32),
+            "prev_mix": jnp.zeros((L, B, cfg.d_model), dtype),
+            "prev_cm": jnp.zeros((L, B, cfg.d_model), dtype),
+        }
+    if mixer == "rglru":
+        return {
+            "h": jnp.zeros((L, B, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros(
+                (L, B, cfg.conv_width - 1, cfg.lru_width), dtype
+            ),
+        }
+    raise ValueError(f"unknown mixer kind {mixer!r}")
+
+
+def write_token(cache_kv, new_kv, length):
+    """Write one token's (B, 1, ...) entry at ring slot length % T."""
+    T = cache_kv.shape[1]
+    slot = (length % T).astype(jnp.int32)
+    return jax.lax.dynamic_update_slice_in_dim(cache_kv, new_kv, slot, axis=1)

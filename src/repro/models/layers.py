@@ -1,0 +1,51 @@
+"""Shared primitive layers: RMSNorm, rotary embedding, MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rotary", "apply_rope", "swiglu", "gelu_mlp"]
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def rotary(positions, dim: int, theta: float, dtype=jnp.float32):
+    """(..., P) int positions -> cos/sin tables (..., P, dim//2)."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    """LLaMA-style gated MLP: (x@w1 * silu(x@w3)) @ w2."""
+    h = jnp.einsum("...d,dh->...h", x, w1)
+    g = jax.nn.silu(jnp.einsum("...d,dh->...h", x, w3))
+    return jnp.einsum("...h,hd->...d", h * g, w2)
+
+
+def gelu_mlp(x, w1, w2):
+    h = jax.nn.gelu(jnp.einsum("...d,dh->...h", x, w1))
+    return jnp.einsum("...h,hd->...d", h, w2)

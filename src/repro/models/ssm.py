@@ -1,0 +1,250 @@
+"""Attention-free mixers: RWKV6 (Finch) and RG-LRU (Griffin/RecurrentGemma).
+
+Both are linear-recurrence token mixers with O(1) decode state — they are
+what makes the ``long_500k`` cell feasible.  Train/prefill run the
+recurrence with ``lax.scan`` over time (chunk-parallel forms are a §Perf
+extension); decode is a single recurrence step on carried state.
+
+RWKV6 (arXiv:2404.05892), simplified faithfully:
+  per head h, state S_t in R^{dk x dv}:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^t v_t)        (u: bonus for current)
+  with data-dependent decay w_t = exp(-exp(w0 + tanh(x_t A) B)) and
+  token-shift interpolation x'_t = lerp(x_t, x_{t-1}, mu_*).
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(x_t W_r);  i_t = sigmoid(x_t W_i)
+    a_t = a^(c * r_t)  (a = sigmoid(Lambda), c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+  preceded by a short depthwise conv1d (Griffin recurrent block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rwkv6_mix", "rwkv6_channelmix", "rglru_block"]
+
+
+# --------------------------------------------------------------------- RWKV6
+def _rwkv6_chunked(r, k, v, w, u, state0, chunk: int = 16):
+    """Chunk-parallel (GLA-form) RWKV6 recurrence — the §Perf variant.
+
+    Equivalent to the per-token scan but processes C tokens per step;
+    state I/O drops from per-token to per-chunk (C x fewer HBM bytes for
+    the (B, H, Dk, Dv) state and, crucially, for the backward pass's
+    scan-saved copies).  Derivation: with per-channel decay w_t and
+    b_i = sum_{j<=i} log w_j (monotone non-increasing within a chunk),
+
+      intra:  o_i += sum_{j<i} (r_i * e^{b_{i-1}-b_j}) . k_j  v_j
+              + (r_i . u k_i) v_i                  (diagonal bonus)
+      cross:  o_i += (r_i * e^{b_{i-1}}) S_in
+      state:  S_out = diag(e^{b_last}) S_in + sum_j (k_j e^{b_last-b_j})^T v_j
+
+    All exponents are <= 0: cross/state by monotonicity, and the intra
+    pair term is computed *exactly* per (i, j, d) inside one fused
+    broadcast-multiply-reduce (the (B, C, C, H, D) intermediate never
+    reaches HBM), clamped at 0 only for the masked j >= i half.  This
+    avoids the overflow-prone e^{-b_j} factoring of matmul-form GLA; the
+    anchored sub-chunk factoring (FLA) is the follow-up if MXU utilization
+    of the intra term ever matters — at C = 16 the intra work is ~C/S of
+    the recurrent FLOPs and stays off the roofline.
+
+    The chunk step is jax.checkpoint'ed: backward saves one state per
+    chunk, not per token.
+    """
+    B, S, H, D = r.shape
+    if S % chunk:
+        pad = chunk - S % chunk
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded tokens: k=v=r=0 (no output/state contribution), w=1
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        S_pad = S + pad
+    else:
+        S_pad = S
+    C = chunk
+    N = S_pad // C
+
+    def seg(t):  # (B, S, H, D) -> (N, B, C, H, D)
+        return jnp.moveaxis(t.reshape(B, N, C, H, D), 1, 0)
+
+    rs, ks, vs, ws = seg(r), seg(k), seg(v), seg(w)
+    causal = jnp.tril(jnp.ones((C, C), jnp.float32), -1)  # strict lower
+
+    def chunk_step(state, inp):
+        r_c, k_c, v_c, w_c = inp  # (B, C, H, D)
+        # r/k/v may arrive in bf16 (their producing matmuls are bf16, so
+        # this is their native precision); all recurrence math is f32.
+        r_c, k_c, v_c = (t.astype(jnp.float32) for t in (r_c, k_c, v_c))
+        logw = jnp.log(jnp.maximum(w_c, 1e-38))
+        b = jnp.cumsum(logw, axis=1)             # (B, C, H, D), <= 0
+        b_last = b[:, -1:, :, :]
+        b_prev = b - logw                        # b_{i-1}
+        # intra-chunk, exact pairwise decay: exponent b_{i-1} - b_j <= 0
+        # for the causal (j < i) half; clamp the masked half to 0 so the
+        # exp never overflows.  One fused elementwise+reduce on TPU.
+        expo = jnp.minimum(
+            b_prev[:, :, None, :, :] - b[:, None, :, :, :], 0.0
+        )  # (B, C, C, H, D)
+        att = jnp.sum(
+            r_c[:, :, None, :, :] * k_c[:, None, :, :, :] * jnp.exp(expo),
+            axis=-1,
+        )  # (B, C, C, H)
+        att = att * causal[None, :, :, None]
+        o = jnp.einsum("bijh,bjhd->bihd", att, v_c)
+        diag = jnp.einsum("bihd,bihd->bih", r_c * u[None, None], k_c)
+        o = o + diag[..., None] * v_c
+        # cross-chunk from carried state (exponent <= 0)
+        q_in = r_c * jnp.exp(b_prev)
+        o = o + jnp.einsum("bihk,bhkv->bihv", q_in, state)
+        # state update (exponents <= 0)
+        k_out = k_c * jnp.exp(b_last - b)
+        state = jnp.exp(b_last)[:, 0, :, :, None] * state + jnp.einsum(
+            "bjhk,bjhv->bhkv", k_out, v_c
+        )
+        return state, o
+
+    state, outs = jax.lax.scan(
+        jax.checkpoint(chunk_step), state0, (rs, ks, vs, ws)
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S_pad, H, D)
+    return out[:, :S], state
+
+
+def _rwkv6_recurrence(r, k, v, w, u, state0):
+    """r,k,v: (B, S, H, D); w: (B, S, H, D) decay in (0,1); u: (H, D).
+
+    state: (B, H, D, D) mapping k-dim -> v-dim.  Returns (out, state_final).
+    """
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, D)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, Dk, Dv)
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv
+        )
+        state = w_t[..., :, None] * state + kv
+        return state, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1), state  # (B, S, H, Dv)
+
+
+def rwkv6_mix(p, x, cfg, state=None, prev_x=None):
+    """RWKV6 time-mix.  x: (B, S, d).  Returns (y, (state, last_x))."""
+    B, S, d = x.shape
+    H, D = cfg.num_heads, cfg.rwkv_head_dim
+    dt = x.dtype
+    if prev_x is None:
+        prev_x = jnp.zeros((B, d), dt)
+    x_shift = jnp.concatenate([prev_x[:, None], x[:, :-1]], axis=1)
+
+    def lerp(mu):
+        return x + (x_shift - x) * mu
+
+    def heads(t):
+        return t.reshape(B, S, H, D)
+
+    r = heads(lerp(p["rwkv_mu_r"]) @ p["rwkv_w_r"])
+    k = heads(lerp(p["rwkv_mu_k"]) @ p["rwkv_w_k"])
+    v = heads(lerp(p["rwkv_mu_v"]) @ p["rwkv_w_v"])
+    g = jax.nn.silu(lerp(p["rwkv_mu_g"]) @ p["rwkv_w_g"])
+    # data-dependent decay (low-rank): w = exp(-exp(w0 + tanh(x A) B))
+    dd = jnp.tanh(lerp(p["rwkv_mu_w"]) @ p["rwkv_w_decay_a"])
+    logit = p["rwkv_w0"] + dd @ p["rwkv_w_decay_b"]
+    w = heads(jnp.exp(-jnp.exp(logit.astype(jnp.float32)))).astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((B, H, D, D), jnp.float32)
+    chunk = getattr(cfg, "rwkv_chunk", 0)
+    if chunk and S > 1:
+        # chunked path: r/k/v streams stay bf16 until inside the chunk
+        # step (halves the scan-saved stream bytes); decay stays f32.
+        out, state = _rwkv6_chunked(
+            r, k, v, w, p["rwkv_u"].astype(jnp.float32), state,
+            chunk=chunk,
+        )
+    else:
+        out, state = _rwkv6_recurrence(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w, p["rwkv_u"].astype(jnp.float32),
+            state,
+        )
+    out = out.reshape(B, S, H * D).astype(dt)
+    y = (out * g) @ p["rwkv_w_o"]
+    return y, (state, x[:, -1])
+
+
+def rwkv6_channelmix(p, x, prev_x=None):
+    """RWKV channel-mix FFN (relu^2), with token shift."""
+    B, S, d = x.shape
+    if prev_x is None:
+        prev_x = jnp.zeros((B, d), x.dtype)
+    x_shift = jnp.concatenate([prev_x[:, None], x[:, :-1]], axis=1)
+    xk = x + (x_shift - x) * p["rwkv_mu_ck"]
+    xr = x + (x_shift - x) * p["rwkv_mu_cr"]
+    h = jnp.square(jax.nn.relu(xk @ p["rwkv_w_ck"]))
+    gate = jax.nn.sigmoid(xr @ p["rwkv_w_cr"])
+    return gate * (h @ p["rwkv_w_cv"]), x[:, -1]
+
+
+# -------------------------------------------------------------------- RG-LRU
+LRU_C = 8.0
+
+
+def _rglru_recurrence(a, gated_x, h0, out_dtype=jnp.float32):
+    """a: (B, S, W) f32 (decay precision near 1 matters); gated_x may be
+    bf16 (its producing matmul/gates are bf16 — §Perf stream-dtype cut);
+    h0: (B, W) f32 carry.  Emits hs in ``out_dtype``."""
+    def step(h, inp):
+        a_t, gx_t = inp
+        h = a_t * h + jnp.sqrt(
+            jnp.maximum(1.0 - a_t * a_t, 0.0)
+        ) * gx_t.astype(jnp.float32)
+        return h, h.astype(out_dtype)
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated_x, 1, 0))
+    h, outs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(outs, 0, 1), h
+
+
+def rglru_block(p, x, cfg, state=None):
+    """Griffin recurrent block: in-proj + conv1d + RG-LRU + gated out-proj.
+
+    x: (B, S, d).  state = (h (B,W) f32, conv tail (B, cw-1, W)).
+    Returns (y, state).
+    """
+    B, S, d = x.shape
+    W = cfg.lru_width
+    cw = cfg.conv_width
+    dt = x.dtype
+    u = x @ p["lru_in"]  # (B, S, W)
+    gate_branch = jax.nn.gelu(x @ p["lru_gate"])
+
+    if state is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+        conv_tail = jnp.zeros((B, cw - 1, W), dt)
+    else:
+        h0, conv_tail = state
+    # depthwise causal conv1d over time, width cw
+    u_pad = jnp.concatenate([conv_tail, u], axis=1)  # (B, S+cw-1, W)
+    conv = sum(
+        u_pad[:, i : i + S] * p["lru_conv"][i][None, None, :]
+        for i in range(cw)
+    ) + p["lru_conv_bias"][None, None, :]
+    new_tail = u_pad[:, S:, :]
+
+    # per-channel gates (Griffin uses block-diagonal W_a/W_x; the diagonal
+    # form keeps the recurrence TP-shardable with zero replicated weight)
+    r = jax.nn.sigmoid(conv * p["lru_wr"][None, None, :] + p["lru_br"])
+    i_g = jax.nn.sigmoid(conv * p["lru_wi"][None, None, :] + p["lru_bi"])
+    log_a = -LRU_C * r * jax.nn.softplus(p["lru_lambda"])[None, None, :]
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gx = i_g * conv  # stays in activation dtype; f32 inside the step
+    hs, h_last = _rglru_recurrence(a, gx, h0, out_dtype=dt)
+    y = (hs * gate_branch) @ p["lru_out"]
+    return y, (h_last, new_tail)

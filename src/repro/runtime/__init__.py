@@ -1,0 +1,17 @@
+from .managers import (
+    FailureInjector,
+    HeartbeatMonitor,
+    RemeshPlan,
+    SimClock,
+    StragglerPolicy,
+    plan_remesh,
+)
+
+__all__ = [
+    "FailureInjector",
+    "HeartbeatMonitor",
+    "RemeshPlan",
+    "SimClock",
+    "StragglerPolicy",
+    "plan_remesh",
+]

@@ -1,0 +1,167 @@
+"""Fleet runtime managers: failure, straggler, elasticity — simulated clock.
+
+These are the LM-training-side counterparts of the fault-tolerance already
+built into ``core.protocol`` for the paper's Algorithm 1.  Everything is
+driven by an injectable ``SimClock`` so behaviour is deterministic and
+testable without wall-clock sleeps; `launch/train.py` wires them into the
+step loop, and a deployment would replace SimClock with real heartbeats.
+
+Design notes for 1000+ nodes:
+
+* **Heartbeats, not pings.** Workers push heartbeats; the monitor only scans
+  its table (O(workers) per check, no network fan-out from the coordinator).
+* **Straggler policy = deadline + quorum**, the same rule the paper's
+  coordinator applies to institutions: a round proceeds when >= quorum
+  workers have reported, stragglers' contributions are dropped for the round
+  (grad-accumulation semantics make a dropped microbatch a smaller, still
+  unbiased batch).
+* **Elasticity by re-meshing from checkpoint**: when membership changes, we
+  pick the largest (dp, tp) grid that fits the survivors while preserving
+  the TP degree (param shardings stay valid), and the train loop restores from
+  the latest checkpoint.  `plan_remesh` is pure and unit-tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+__all__ = [
+    "SimClock",
+    "HeartbeatMonitor",
+    "StragglerPolicy",
+    "FailureInjector",
+    "plan_remesh",
+    "RemeshPlan",
+]
+
+
+class SimClock:
+    """Deterministic monotonically-advancing clock."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError("time does not go backwards")
+        self.t += dt
+        return self.t
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Declares a worker dead after ``timeout`` without a heartbeat."""
+
+    clock: SimClock
+    timeout: float = 60.0
+    _last: dict = dataclasses.field(default_factory=dict)
+
+    def register(self, worker: str):
+        self._last[worker] = self.clock.now()
+
+    def beat(self, worker: str):
+        if worker not in self._last:
+            raise KeyError(f"unregistered worker {worker!r}")
+        self._last[worker] = self.clock.now()
+
+    def deregister(self, worker: str):
+        self._last.pop(worker, None)
+
+    def alive(self) -> list[str]:
+        now = self.clock.now()
+        return sorted(
+            w for w, t in self._last.items() if now - t <= self.timeout
+        )
+
+    def dead(self) -> list[str]:
+        now = self.clock.now()
+        return sorted(
+            w for w, t in self._last.items() if now - t > self.timeout
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    """Deadline + quorum rule for one collective round."""
+
+    deadline: float = 30.0  # seconds from round start
+    quorum_fraction: float = 0.75  # fraction of live workers required
+
+    def split(
+        self, arrivals: dict[str, float], round_start: float
+    ) -> tuple[list[str], list[str]]:
+        """-> (responders, stragglers) by arrival time vs deadline."""
+        resp = sorted(
+            w for w, t in arrivals.items()
+            if t - round_start <= self.deadline
+        )
+        lag = sorted(set(arrivals) - set(resp))
+        return resp, lag
+
+    def quorum_met(self, num_responders: int, num_live: int) -> bool:
+        import math
+
+        need = max(1, math.ceil(self.quorum_fraction * num_live))
+        return num_responders >= need
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministic failure schedule for chaos tests.
+
+    ``schedule`` maps step -> iterable of worker names to kill (or
+    ``("recover", name)`` tuples to bring one back).
+    """
+
+    schedule: dict = dataclasses.field(default_factory=dict)
+
+    def events_at(self, step: int) -> list:
+        return list(self.schedule.get(step, ()))
+
+    def apply(self, step: int, monitor: HeartbeatMonitor) -> list[str]:
+        """Kill/recover per schedule; returns the names affected."""
+        hit = []
+        for ev in self.events_at(step):
+            if isinstance(ev, tuple) and ev[0] == "recover":
+                monitor.register(ev[1])
+                hit.append(ev[1])
+            else:
+                monitor.deregister(ev)
+                hit.append(ev)
+        return hit
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    dp: int
+    tp: int
+    dropped_workers: int
+
+    @property
+    def devices(self) -> int:
+        return self.dp * self.tp
+
+
+def plan_remesh(
+    available_devices: int, tp: int, *, max_dp: int | None = None
+) -> RemeshPlan:
+    """Largest (dp, tp) grid fitting the survivors, preserving TP degree.
+
+    TP degree is preserved because parameter shardings (and the collectives
+    compiled against them) assume it; only the data-parallel extent shrinks.
+    Raises when not even one TP group survives.
+    """
+    if tp <= 0:
+        raise ValueError("tp must be positive")
+    dp = available_devices // tp
+    if dp < 1:
+        raise RuntimeError(
+            f"{available_devices} devices cannot host one tp={tp} group"
+        )
+    if max_dp is not None:
+        dp = min(dp, max_dp)
+    return RemeshPlan(dp=dp, tp=tp,
+                      dropped_workers=available_devices - dp * tp)

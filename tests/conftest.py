@@ -1,0 +1,13 @@
+# NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
+# benchmarks must see the real single CPU device; only launch/dryrun.py (run
+# as a subprocess) forces 512 placeholder devices.
+import jax
+import pytest
+
+# repro.core enables x64 on import; import early so every test sees one state.
+import repro.core  # noqa: F401
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode
+step on CPU, asserting shapes + finiteness.  Full configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.distributed import MeshRules
+from repro.models import transformer as T
+from repro.models.config import SHAPES, block_kinds, segments
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "logreg_paper"]
+RULES = MeshRules(mesh=None)
+B, S = 2, 32
+
+
+def make_batch(cfg, key):
+    kt, kl = jax.random.split(key)
+    labels = jax.random.randint(kl, (B, S), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    if cfg.frontend == "embeddings":
+        return {
+            "embeds": jax.random.normal(kt, (B, S, cfg.d_model),
+                                        jnp.float32),
+            "labels": labels,
+        }
+    return {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size,
+                                     dtype=jnp.int32),
+        "labels": labels,
+    }
+
+
+@pytest.fixture(scope="module")
+def smoke(request):
+    return None
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_and_loss(arch):
+    cfg = smoke_config(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = T.forward(params, cfg, RULES,
+                            tokens=batch.get("tokens"),
+                            embeds=batch.get("embeds"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+    loss, metrics = T.loss_fn(params, batch, cfg, RULES)
+    assert np.isfinite(float(loss))
+    # one gradient step must produce finite grads
+    g = jax.grad(lambda p: T.loss_fn(p, batch, cfg, RULES)[0])(params)
+    finite = jax.tree_util.tree_all(
+        jax.tree_util.tree_map(lambda x: bool(jnp.isfinite(x).all()), g)
+    )
+    assert finite, arch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_prefill_then_decode(arch):
+    cfg = smoke_config(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits, cache, length = T.prefill(
+        params, cfg, RULES,
+        tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        cache_len=S + 4,
+    )
+    assert logits.shape == (B, cfg.vocab_size)
+    assert int(length) == S
+    if cfg.frontend == "embeddings":
+        step_in = {"embeds": jnp.ones((B, cfg.d_model), jnp.float32)}
+    else:
+        step_in = {"tokens": jnp.zeros((B,), jnp.int32)}
+    logits2, cache2, length2 = T.decode_step(
+        params, cache, length, cfg, RULES, **step_in
+    )
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all()), arch
+    assert int(length2) == S + 1
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_decode_matches_prefill_continuation(arch):
+    """KV-cache correctness: decoding token t yields the same logits as a
+    fresh prefill over the first t+1 tokens (teacher forcing)."""
+    cfg = smoke_config(arch)
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    key = jax.random.PRNGKey(3)
+    S0 = 8
+    if cfg.frontend == "embeddings":
+        full = jax.random.normal(key, (B, S0 + 1, cfg.d_model), jnp.float32)
+        pre = {"embeds": full[:, :S0]}
+        step = {"embeds": full[:, S0]}
+        pre2 = {"embeds": full}
+    else:
+        full = jax.random.randint(key, (B, S0 + 1), 0, cfg.vocab_size,
+                                  dtype=jnp.int32)
+        pre = {"tokens": full[:, :S0]}
+        step = {"tokens": full[:, S0]}
+        pre2 = {"tokens": full}
+    _, cache, length = T.prefill(params, cfg, RULES, cache_len=S0 + 4, **pre)
+    dec_logits, _, _ = T.decode_step(params, cache, length, cfg, RULES,
+                                     **step)
+    ref_logits, _, _ = T.prefill(params, cfg, RULES, cache_len=S0 + 5,
+                                 **pre2)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(ref_logits, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+def test_long500k_skip_list_matches_design():
+    """Sub-quadratic archs (and only those) accept the long_500k cell."""
+    expect_runs = {"h2o_danube3_4b", "rwkv6_3b", "recurrentgemma_9b"}
+    runs = {a for a in LM_ARCHS if get_config(a).sub_quadratic}
+    assert runs == expect_runs
+
+
+def test_block_kind_patterns():
+    rg = get_config("recurrentgemma_9b")
+    kinds = block_kinds(rg)
+    assert kinds[0][0] == "rglru" and kinds[2][0] == "local"
+    assert sum(1 for k in kinds if k[0] == "local") == 12
+    dsl = get_config("deepseek_v2_lite")
+    kinds = block_kinds(dsl)
+    assert kinds[0] == ("mla", "dense_big")
+    assert all(k == ("mla", "moe") for k in kinds[1:])
+    assert len(segments(dsl)) == 2

@@ -1,0 +1,50 @@
+"""Dry-run machinery smoke: lower+compile reduced cells on tiny meshes.
+
+Runs launch/dryrun.py as a subprocess (it must own XLA_FLAGS before jax
+init) with --smoke --host-devices 4 --mesh-shape 2,2 for one arch per
+family, plus the microbatched and optimized paths.  This is the CI guard
+for the 256/512-chip sweeps.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(tmp_path, arch, shape, *extra):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--smoke",
+           "--host-devices", "4", "--mesh-shape", "2,2",
+           "--out", str(tmp_path), *extra]
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=420)
+    assert r.returncode == 0, r.stderr[-2000:]
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    rec = json.load(open(os.path.join(tmp_path, sorted(files)[-1])))
+    return rec
+
+
+@pytest.mark.parametrize("arch", ["deepseek_7b", "rwkv6_3b",
+                                  "qwen3_moe_235b"])
+def test_dryrun_train_smoke(tmp_path, arch):
+    rec = _run(tmp_path, arch, "train_4k")
+    assert rec["hlo_analysis"]["flops_per_device"] > 0
+    assert rec["memory"]["temp_bytes_per_device"] > 0
+
+
+def test_dryrun_microbatch_and_optimized(tmp_path):
+    rec = _run(tmp_path, "h2o_danube3_4b", "train_4k",
+               "--microbatch", "2", "--optimized",
+               "--variant", "opt")
+    assert rec["variant"] == "opt"
+    assert rec["hlo_analysis"]["flops_per_device"] > 0
+
+
+def test_dryrun_decode_smoke(tmp_path):
+    rec = _run(tmp_path, "recurrentgemma_9b", "decode_32k")
+    assert rec["hlo_analysis"]["bytes_per_device"] > 0

@@ -1,0 +1,83 @@
+"""Property tests for the finite-field layer (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.field import (
+    FIELD31,
+    FIELD_WIDE,
+    crt_combine_signed,
+    fadd,
+    finv_host,
+    fmul,
+    fneg,
+    fsub,
+    lift_signed,
+    random_elements,
+)
+
+FIELDS = [FIELD31, FIELD_WIDE]
+
+
+def elems(field, values):
+    """Lift python ints to (R, n) reduced field elements."""
+    return lift_signed(jnp.asarray(values, dtype=jnp.int64), field)
+
+
+@pytest.mark.parametrize("field", FIELDS, ids=lambda f: f.name)
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_field_ring_axioms(field, data):
+    n = 4
+    lim = field.moduli[0] - 1
+    a = data.draw(st.lists(st.integers(0, lim), min_size=n, max_size=n))
+    b = data.draw(st.lists(st.integers(0, lim), min_size=n, max_size=n))
+    c = data.draw(st.lists(st.integers(0, lim), min_size=n, max_size=n))
+    fa, fb, fc = elems(field, a), elems(field, b), elems(field, c)
+    # commutativity / associativity / distributivity
+    assert (fadd(fa, fb, field) == fadd(fb, fa, field)).all()
+    assert (fmul(fa, fb, field) == fmul(fb, fa, field)).all()
+    lhs = fmul(fa, fadd(fb, fc, field), field)
+    rhs = fadd(fmul(fa, fb, field), fmul(fa, fc, field), field)
+    assert (lhs == rhs).all()
+    # additive inverse
+    zero = jnp.zeros_like(fa)
+    assert (fadd(fa, fneg(fa, field), field) == zero).all()
+    assert (fsub(fa, fa, field) == zero).all()
+
+
+@pytest.mark.parametrize("field", FIELDS, ids=lambda f: f.name)
+@given(v=st.integers(-(2**40), 2**40))
+@settings(max_examples=50, deadline=None)
+def test_signed_lift_roundtrip(field, v):
+    if abs(v) > field.max_signed:
+        v = v % field.max_signed
+    arr = jnp.asarray([v], dtype=jnp.int64)
+    back = crt_combine_signed(lift_signed(arr, field), field)
+    assert int(back[0]) == int(arr[0])
+
+
+def test_crt_range_is_wide():
+    # the CRT pair must cover Hessian-scale aggregates: 1e6 records of
+    # magnitude 1e6 at 2**20 fixed-point scale
+    assert FIELD_WIDE.max_signed > 1e6 * 1e6 * 2**20 / 2  # ~5.5e17 < 2.3e18
+
+
+def test_finv_host():
+    for p in FIELD_WIDE.moduli:
+        for x in (1, 2, 12345, p - 1):
+            assert (x * finv_host(x, p)) % p == 1
+    with pytest.raises(ZeroDivisionError):
+        finv_host(0, FIELD31.moduli[0])
+
+
+def test_random_elements_reduced_and_spread(rng_key):
+    x = random_elements(rng_key, (4096,), FIELD_WIDE)
+    assert x.shape == (2, 4096)
+    p = np.asarray(FIELD_WIDE.moduli, dtype=np.uint64)[:, None]
+    assert (np.asarray(x) < p).all()
+    # crude uniformity check: mean near p/2 within 5%
+    means = np.asarray(x, dtype=np.float64).mean(axis=1)
+    assert np.allclose(means, p[:, 0] / 2, rtol=0.05)

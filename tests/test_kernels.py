@@ -1,0 +1,120 @@
+"""Per-kernel allclose vs pure-jnp oracle, shape/dtype sweeps (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.shamir_poly import mulmod31, addmod
+
+P31 = 2**31 - 1
+P31B = 2**31 - 19
+
+
+# ---------------------------------------------------------------- gram_hessian
+@pytest.mark.parametrize("n", [8, 100, 512, 1000])
+@pytest.mark.parametrize("d", [3, 84, 128, 200])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_gram_hessian_matches_ref(n, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n * 1000 + d))
+    X = jax.random.normal(k1, (n, d), dtype=dtype)
+    w = jax.random.uniform(k2, (n,), dtype=dtype, minval=0.0, maxval=0.25)
+    got = ops.gram_hessian(X, w)
+    want = ref.gram_hessian(X, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_gram_hessian_block_sweep():
+    X = jax.random.normal(jax.random.PRNGKey(0), (777, 84))
+    w = jax.random.uniform(jax.random.PRNGKey(1), (777,))
+    want = ref.gram_hessian(X, w)
+    for bn in (64, 128, 512):
+        got = ops.gram_hessian(X, w, block_n=bn)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------- fused_logistic
+@pytest.mark.parametrize("n", [16, 300, 512, 1111])
+@pytest.mark.parametrize("d", [6, 84, 128])
+def test_fused_logistic_matches_ref(n, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + d), 3)
+    X = jax.random.normal(k1, (n, d), dtype=jnp.float32)
+    y = jax.random.bernoulli(k2, 0.4, (n,)).astype(jnp.float32)
+    beta = 0.3 * jax.random.normal(k3, (d,), dtype=jnp.float32)
+    g, dev, w = ops.fused_logistic(beta, X, y)
+    g_r, dev_r, w_r = ref.fused_logistic(beta, X, y)
+    np.testing.assert_allclose(g, g_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dev, dev_r, rtol=2e-5)
+    np.testing.assert_allclose(w, w_r, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_logistic_agrees_with_core_summaries():
+    """Kernel path == the jnp path used by core.logreg (f64 -> f32 tol)."""
+    from repro.core.logreg import local_summaries
+
+    X = jax.random.normal(jax.random.PRNGKey(5), (400, 20))
+    y = jax.random.bernoulli(jax.random.PRNGKey(6), 0.5, (400,)).astype(
+        jnp.float64
+    )
+    beta = jnp.zeros((20,), dtype=jnp.float64)
+    s = local_summaries(beta, X, y)
+    g, dev, w = ops.fused_logistic(beta, X, y)
+    np.testing.assert_allclose(g, s.gradient, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dev, s.deviance, rtol=1e-5)
+    H = ops.gram_hessian(X, w)
+    np.testing.assert_allclose(H, s.hessian, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- shamir_poly
+@pytest.mark.parametrize("p", [P31, P31B])
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_mulmod31_limb_decomposition(p, data):
+    a = data.draw(st.integers(0, p - 1))
+    b = data.draw(st.integers(0, p - 1))
+    got = mulmod31(jnp.uint32(a), jnp.uint32(b), p)
+    assert int(got) == (a * b) % p
+
+
+@pytest.mark.parametrize("p", [P31, P31B])
+def test_mulmod31_edge_cases(p):
+    edges = [0, 1, 2, 0xFFFF, 0x10000, p - 1, p // 2, 2**30, 2**30 + 1]
+    for a in edges:
+        for b in edges:
+            got = int(mulmod31(jnp.uint32(a), jnp.uint32(b), p))
+            assert got == (a * b) % p, (a, b, p)
+
+
+@pytest.mark.parametrize("p", [P31, P31B])
+@pytest.mark.parametrize("t,w", [(2, 3), (3, 5), (5, 9)])
+@pytest.mark.parametrize("n", [1, 100, 4096])
+def test_shamir_kernel_matches_ref(p, t, w, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(t * 100 + n))
+    secret = jax.random.randint(k1, (n,), 0, p, dtype=jnp.int64).astype(
+        jnp.uint64
+    )
+    coeffs = jax.random.randint(
+        k2, (t - 1, n), 0, p, dtype=jnp.int64
+    ).astype(jnp.uint64)
+    got = ops.shamir_shares(secret, coeffs, w, p)
+    want = ref.shamir_shares(secret, coeffs, w, p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_shamir_kernel_shares_reconstruct_via_core():
+    """Kernel-produced shares must reconstruct through core.shamir."""
+    from repro.core.field import FIELD31, lift_signed
+    from repro.core.shamir import ShamirScheme
+
+    p = P31
+    n = 257
+    vals = jnp.arange(-128, 129, dtype=jnp.int64)
+    secret = lift_signed(vals, FIELD31)[0]  # (n,) uint64
+    coeffs = jax.random.randint(
+        jax.random.PRNGKey(9), (1, n), 0, p, dtype=jnp.int64
+    ).astype(jnp.uint64)
+    shares = ops.shamir_shares(secret, coeffs, 3, p)  # (3, n)
+    sch = ShamirScheme(threshold=2, num_shares=3, field=FIELD31)
+    rec = sch.reconstruct(shares[:, None, :], points=[1, 2, 3])
+    assert (rec[0] == secret).all()

@@ -1,0 +1,56 @@
+"""Elastic-net (L1) secure fit: KKT optimality + protocol invariance.
+
+The institution-side protocol (summaries, shares, aggregation) is
+identical to the L2 path; only the Computation Centers' solver changes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.logreg import predict_proba
+from repro.core.newton import secure_fit
+from repro.data.synthetic import generate_synthetic
+
+
+def _study(key, S=4, n=800, d=10):
+    return generate_synthetic(key, num_institutions=S,
+                              records_per_institution=n, dim=d)
+
+
+def test_l1_zero_matches_l2_path(rng_key):
+    study = _study(rng_key)
+    a = secure_fit(list(study.parts), lam=1.0, l1=0.0)
+    b = secure_fit(list(study.parts), lam=1.0)
+    np.testing.assert_allclose(a.beta, b.beta, rtol=1e-10, atol=1e-12)
+
+
+def test_l1_kkt_conditions(rng_key):
+    """At the elastic-net optimum: |∇_j NLL + lam*beta_j| <= l1 for zero
+    coords; = -l1*sign(beta_j) for active coords (within tolerance)."""
+    study = _study(rng_key, d=8)
+    lam, l1 = 0.5, 8.0
+    res = secure_fit(list(study.parts), lam=lam, l1=l1, max_iter=80,
+                     tol=1e-12)
+    X, y = study.pooled()
+    beta = jnp.asarray(res.beta)
+    p = predict_proba(beta, X)
+    # ascent gradient of logL: X^T (y - p); smooth obj gradient:
+    grad_smooth = -(X.T @ (y - p)) + lam * beta
+    g = np.asarray(grad_smooth)
+    b = np.asarray(beta)
+    tol = 0.05 * l1 + 1e-6
+    for j in range(len(b)):
+        if abs(b[j]) > 1e-8:
+            assert abs(g[j] + l1 * np.sign(b[j])) < tol, (j, g[j], b[j])
+        else:
+            assert abs(g[j]) <= l1 + tol
+
+
+def test_l1_induces_sparsity_monotonically(rng_key):
+    study = _study(rng_key, d=12)
+    nnz = []
+    for l1 in (0.0, 20.0, 200.0):
+        res = secure_fit(list(study.parts), lam=0.1, l1=l1, max_iter=60)
+        nnz.append(int(np.sum(np.abs(res.beta) > 1e-6)))
+    assert nnz[0] >= nnz[1] >= nnz[2]
+    assert nnz[2] < nnz[0]  # strong penalty actually zeroes features

@@ -1,0 +1,101 @@
+"""Fault-tolerance behaviour of the Algorithm-1 coordinator."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    Institution,
+    SecureAggregator,
+    ShamirScheme,
+    StudyCoordinator,
+    centralized_fit,
+)
+from repro.data import generate_synthetic
+
+
+def make_insts(num=4, n=300, dim=6, latencies=None):
+    study = generate_synthetic(
+        jax.random.PRNGKey(11), num_institutions=num,
+        records_per_institution=n, dim=dim,
+    )
+    lat = latencies or [0.0] * num
+    return study, [
+        Institution(f"inst{j}", *study.parts[j], latency=lat[j])
+        for j in range(num)
+    ]
+
+
+def test_full_cohort_matches_gold():
+    study, insts = make_insts()
+    coord = StudyCoordinator(insts, lam=1.0, protect="both")
+    beta = coord.run()
+    gold = centralized_fit(*study.pooled(), lam=1.0)
+    np.testing.assert_allclose(beta, gold.beta, atol=1e-6)
+
+
+def test_center_failures_within_threshold_are_free():
+    study, insts = make_insts()
+    agg = SecureAggregator(scheme=ShamirScheme(threshold=2, num_shares=5))
+    coord = StudyCoordinator(insts, protect="both", aggregator=agg)
+    coord.centers[0].online = False
+    coord.centers[3].online = False
+    coord.centers[4].online = False  # 2 alive == threshold
+    beta = coord.run()
+    gold = centralized_fit(*study.pooled(), lam=1.0)
+    np.testing.assert_allclose(beta, gold.beta, atol=1e-6)
+
+
+def test_too_many_center_failures_detected():
+    _, insts = make_insts()
+    coord = StudyCoordinator(insts, protect="both")
+    coord.centers[0].online = False
+    coord.centers[1].online = False  # 1 alive < t=2
+    with pytest.raises(RuntimeError, match="unrecoverable"):
+        coord.step()
+
+
+def test_straggler_excluded_then_rejoins():
+    study, insts = make_insts(latencies=[0.0, 0.0, 0.0, 9.9])
+    coord = StudyCoordinator(
+        insts, protect="gradient", deadline=1.0, min_responders=2
+    )
+    r1 = coord.step()
+    assert r1.stragglers == ["inst3"]
+    insts[3].latency = 0.0  # straggler recovers
+    r2 = coord.step()
+    assert "inst3" in r2.responders
+
+
+def test_min_responders_enforced():
+    _, insts = make_insts(latencies=[5.0, 5.0, 5.0, 0.0])
+    coord = StudyCoordinator(insts, deadline=1.0, min_responders=3)
+    with pytest.raises(RuntimeError, match="responders"):
+        coord.step()
+
+
+def test_elastic_membership():
+    study, insts = make_insts(num=4)
+    coord = StudyCoordinator(insts[:3], protect="gradient")
+    coord.step()
+    coord.add_institution(insts[3])
+    r = coord.step()
+    assert "inst3" in r.responders
+    coord.remove_institution("inst0")
+    r = coord.step()
+    assert "inst0" not in r.responders
+
+
+def test_checkpoint_resume_bitexact():
+    study, insts = make_insts()
+    a = StudyCoordinator(insts, protect="both", seed=5)
+    for _ in range(2):
+        a.step()
+    state = a.state_dict()
+    # clone coordinator, restore, then both must evolve identically
+    b = StudyCoordinator(
+        [Institution(i.name, i.X, i.y) for i in insts], protect="both", seed=5
+    )
+    b.load_state_dict(state)
+    ra, rb = a.step(), b.step()
+    np.testing.assert_array_equal(np.asarray(a.beta), np.asarray(b.beta))
+    assert ra.objective == rb.objective

@@ -1,0 +1,58 @@
+"""Runtime managers: heartbeats, stragglers, failure injection, remesh."""
+import pytest
+
+from repro.runtime import (
+    FailureInjector,
+    HeartbeatMonitor,
+    SimClock,
+    StragglerPolicy,
+    plan_remesh,
+)
+
+
+def test_heartbeat_death_and_recovery():
+    clock = SimClock()
+    mon = HeartbeatMonitor(clock, timeout=10.0)
+    for w in ("a", "b", "c"):
+        mon.register(w)
+    clock.advance(5.0)
+    mon.beat("a")
+    clock.advance(7.0)  # b, c last beat 12s ago; a 7s ago
+    assert mon.alive() == ["a"]
+    assert mon.dead() == ["b", "c"]
+    mon.beat("a")
+    with pytest.raises(KeyError):
+        mon.beat("zz")
+
+
+def test_straggler_policy_split_and_quorum():
+    pol = StragglerPolicy(deadline=3.0, quorum_fraction=0.5)
+    arrivals = {"w0": 1.0, "w1": 2.5, "w2": 9.0, "w3": 3.0}
+    resp, lag = pol.split(arrivals, round_start=0.0)
+    assert resp == ["w0", "w1", "w3"] and lag == ["w2"]
+    assert pol.quorum_met(3, 4)
+    assert not pol.quorum_met(1, 4)
+    assert pol.quorum_met(1, 1)
+
+
+def test_failure_injector_kill_and_recover():
+    clock = SimClock()
+    mon = HeartbeatMonitor(clock, timeout=10.0)
+    for w in ("a", "b"):
+        mon.register(w)
+    inj = FailureInjector({3: ["b"], 5: [("recover", "b")]})
+    assert inj.apply(1, mon) == []
+    assert inj.apply(3, mon) == ["b"]
+    assert mon.alive() == ["a"]
+    assert inj.apply(5, mon) == ["b"]
+    assert mon.alive() == ["a", "b"]
+
+
+def test_plan_remesh_preserves_tp():
+    plan = plan_remesh(512, tp=16)
+    assert (plan.dp, plan.tp, plan.devices) == (32, 16, 512)
+    # lose 17 devices -> dp shrinks, tp preserved, 15 idle
+    plan = plan_remesh(495, tp=16)
+    assert plan.tp == 16 and plan.dp == 30 and plan.dropped_workers == 15
+    with pytest.raises(RuntimeError):
+        plan_remesh(7, tp=16)

@@ -1,0 +1,125 @@
+"""Shamir scheme: correctness, threshold security, homomorphisms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.field import FIELD31, FIELD_WIDE, lift_signed
+from repro.core.fixed_point import FixedPointCodec
+from repro.core.shamir import ShamirScheme, lagrange_coeffs_at_zero
+from repro.core.secure_agg import (
+    SecureAggregator,
+    secure_add,
+    secure_scale_by_public,
+)
+
+
+@pytest.mark.parametrize("t,w", [(1, 1), (2, 3), (3, 5), (5, 9)])
+@pytest.mark.parametrize("field", [FIELD31, FIELD_WIDE], ids=lambda f: f.name)
+def test_share_reconstruct_roundtrip(t, w, field, rng_key):
+    sch = ShamirScheme(threshold=t, num_shares=w, field=field)
+    secret = lift_signed(
+        jnp.asarray([0, 1, -1, 123456, -(10**9)], dtype=jnp.int64), field
+    )
+    shares = sch.share(rng_key, secret)
+    assert shares.shape == (w, field.num_residues, 5)
+    assert (sch.reconstruct(shares) == secret).all()
+    # any t-subset suffices
+    idx = list(range(w - t, w))
+    sub = shares[jnp.asarray(idx)]
+    pts = [i + 1 for i in idx]
+    assert (sch.reconstruct(sub, points=pts) == secret).all()
+
+
+def test_below_threshold_rejected(rng_key):
+    sch = ShamirScheme(threshold=3, num_shares=5)
+    secret = lift_signed(jnp.asarray([42], dtype=jnp.int64), sch.field)
+    shares = sch.share(rng_key, secret)
+    with pytest.raises(ValueError, match="irrecoverable"):
+        sch.reconstruct(shares[:2], points=[1, 2])
+
+
+def test_single_share_is_uniformly_distributed():
+    """Information-theoretic hiding: one share of a constant secret should
+    look uniform over the field (chi-square-lite bucket test)."""
+    sch = ShamirScheme(threshold=2, num_shares=3, field=FIELD31)
+    secret = lift_signed(jnp.zeros((2048,), dtype=jnp.int64), FIELD31)
+    shares = sch.share(jax.random.PRNGKey(7), secret)
+    one = np.asarray(shares[0][0], dtype=np.float64)  # first holder's slice
+    p = FIELD31.moduli[0]
+    hist, _ = np.histogram(one, bins=16, range=(0, p))
+    expected = 2048 / 16
+    # loose bound: all buckets within 40% of expectation
+    assert (np.abs(hist - expected) < 0.4 * expected).all()
+
+
+def test_shares_differ_across_institutions(rng_key):
+    """Fresh polynomial randomness per protect() call."""
+    sch = ShamirScheme()
+    secret = lift_signed(jnp.asarray([99], dtype=jnp.int64), sch.field)
+    s1 = sch.share(jax.random.PRNGKey(1), secret)
+    s2 = sch.share(jax.random.PRNGKey(2), secret)
+    assert not (s1 == s2).all()
+
+
+@given(vals=st.lists(st.integers(-(2**30), 2**30), min_size=2, max_size=6))
+@settings(max_examples=20, deadline=None)
+def test_additive_homomorphism(vals):
+    """Algorithm 2 correctness: share-wise sums reconstruct to the sum."""
+    sch = ShamirScheme(threshold=2, num_shares=3, field=FIELD_WIDE)
+    secrets = [
+        lift_signed(jnp.asarray([v], dtype=jnp.int64), sch.field) for v in vals
+    ]
+    shared = [
+        sch.share(jax.random.PRNGKey(i), s) for i, s in enumerate(secrets)
+    ]
+    acc = shared[0]
+    for s in shared[1:]:
+        acc = secure_add(acc, s, sch.field, residue_axis=1)
+    total = int(sum(vals))
+    expect = lift_signed(jnp.asarray([total], dtype=jnp.int64), sch.field)
+    assert (sch.reconstruct(acc) == expect).all()
+
+
+def test_scale_by_public_constant(rng_key):
+    sch = ShamirScheme(field=FIELD_WIDE)
+    secret = lift_signed(jnp.asarray([17, -5], dtype=jnp.int64), sch.field)
+    shares = sch.share(rng_key, secret)
+    c = lift_signed(jnp.asarray(7, dtype=jnp.int64), sch.field)
+    c_b = c.reshape(1, sch.field.num_residues, 1)
+    scaled = secure_scale_by_public(shares, c_b, sch.field, residue_axis=1)
+    expect = lift_signed(jnp.asarray([119, -35], dtype=jnp.int64), sch.field)
+    assert (sch.reconstruct(scaled) == expect).all()
+
+
+def test_lagrange_weights_sum_property():
+    """sum_i L_i(0) * x_i^0 reconstructs constants: weights of the constant
+    polynomial must sum to 1 mod p."""
+    for field in (FIELD31, FIELD_WIDE):
+        lam = np.asarray(lagrange_coeffs_at_zero([1, 2, 3], field))
+        for r, p in enumerate(field.moduli):
+            assert int(lam[r].sum()) % p == 1
+
+
+def test_pytree_share_roundtrip(rng_key):
+    agg = SecureAggregator()
+    tree = {"h": jnp.eye(3) * 2.5, "g": jnp.asarray([1.0, -2.0]),
+            "dev": jnp.asarray(3.25)}
+    prot = agg.protect(rng_key, tree)
+    out = agg.reveal(prot)
+    for k in tree:
+        np.testing.assert_allclose(out[k], tree[k], atol=2**-20)
+
+
+@given(
+    floats=st.lists(
+        st.floats(-1e5, 1e5, allow_nan=False, width=32), min_size=1, max_size=8
+    )
+)
+@settings(max_examples=30, deadline=None)
+def test_fixed_point_quantization_bound(floats):
+    codec = FixedPointCodec()
+    x = jnp.asarray(floats, dtype=jnp.float64)
+    err = np.abs(np.asarray(codec.decode(codec.encode(x))) - np.asarray(x))
+    assert (err <= 0.5 / codec.scale + 1e-12).all()

@@ -1,0 +1,119 @@
+"""Property tests for the sharding rules (distributed/sharding.py).
+
+Invariants the 256/512-chip dry-run relies on:
+  * a sharded dim is always divisible by the product of its mesh axes,
+  * specs never reuse a mesh axis twice within one PartitionSpec,
+  * every (arch x parallelism-flag) combination yields valid specs for
+    every parameter of the full config.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.perf_presets import apply_preset
+from repro.distributed.sharding import MeshRules, param_pspec
+from repro.models import transformer as T
+from repro.models.config import SHAPES
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "logreg_paper"]
+
+
+def _mesh_sizes():
+    return {"data": 16, "model": 16}
+
+
+def _axis_size(axis, sizes):
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= sizes[a]
+        return n
+    return sizes[axis]
+
+
+class _FakeRules:
+    """MeshRules stand-in with a fixed 16x16 shape, no device allocation."""
+
+    tp_axis = "model"
+    tp_size = 16
+    dp_size = 16
+    dp_axes = ("data",)
+    mesh = object()  # truthy
+
+    def fsdp_axes(self):
+        return self.dp_axes
+
+
+def _check_spec(spec, shape, sizes):
+    used = []
+    for dim, axis in enumerate(spec):
+        if axis is None:
+            continue
+        n = _axis_size(axis, sizes)
+        assert shape[dim] % n == 0, (spec, shape, dim)
+        axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+        for a in axes:
+            assert a not in used, f"axis {a} used twice in {spec}"
+            used.append(a)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("flags", [
+    {},
+    {"fsdp_only": True},
+    {"rwkv_batch_parallel": True},
+    {"seq_parallel_prefill": True},
+])
+def test_param_specs_valid_for_all_archs(arch, flags):
+    cfg = dataclasses.replace(get_config(arch), **flags)
+    sizes = _mesh_sizes()
+    rules = _FakeRules()
+    params = T.abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        shape = leaf.shape
+        if "segments" in pstr and leaf.ndim >= 1:
+            spec = (None,) + tuple(
+                param_pspec(pstr, shape[1:], rules, cfg)
+            )
+        else:
+            spec = tuple(param_pspec(pstr, shape, rules, cfg))
+        assert len(spec) <= len(shape) + 1
+        _check_spec(spec[:len(shape)], shape, sizes)
+
+
+@given(
+    d=st.sampled_from([1024, 2560, 3840, 4096, 5120, 8192]),
+    heads=st.sampled_from([8, 16, 24, 32, 40, 56, 64]),
+    ff=st.sampled_from([1536, 10240, 11008, 27648, 29568]),
+)
+@settings(max_examples=40, deadline=None)
+def test_attention_mlp_specs_never_overshard(d, heads, ff):
+    cfg = dataclasses.replace(
+        get_config("deepseek_7b"), d_model=d, num_heads=heads,
+        num_kv_heads=heads, d_ff=ff,
+    )
+    sizes = _mesh_sizes()
+    rules = _FakeRules()
+    for name, shape in (("wq", (d, heads * 128)), ("wo", (heads * 128, d)),
+                        ("w1", (d, ff)), ("w2", (ff, d))):
+        spec = tuple(param_pspec(name, shape, rules, cfg))
+        _check_spec(spec, shape, sizes)
+
+
+def test_preset_application_is_pure():
+    for arch in LM_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            out = apply_preset(cfg, shape)
+            assert out.name == cfg.name
+            # never mutates the original
+            assert get_config(arch) == cfg

@@ -1,0 +1,68 @@
+"""Context-parallel SWA attention (halo exchange) vs single-device attend.
+
+Runs swa_attend_cp under a real (1, ntp) device mesh (host platform forced
+to 8 CPU devices via conftest? no — this test spawns its own mesh from
+whatever devices exist and skips when only 1 is present; the dry-run is
+the full-scale check) — here we validate NUMERICS with ntp=1 mesh plus a
+pure shard_map single-device run, and the halo logic via a manual
+reference computation with ntp logical chunks executed sequentially.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import MeshRules
+from repro.models.attention import attend, swa_attend_cp
+
+
+def _qkv(key, B=2, S=64, H=4, KVH=2, Dk=16):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dk), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KVH, Dk), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KVH, Dk), jnp.float32)
+    return q, k, v
+
+
+def test_swa_cp_matches_attend_single_device(rng_key):
+    """ntp=1 mesh: halo path degenerates but exercises shard_map + masks."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = MeshRules(mesh=mesh)
+    q, k, v = _qkv(rng_key)
+    ref = attend(q, k, v, window=24)
+    out = swa_attend_cp(q, k, v, window=24, rules=rules)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_swa_cp_halo_logic_manual():
+    """Re-implements the chunked halo computation host-side and checks the
+    masked-position semantics: with window w and chunk L, each q in chunk
+    c attends to positions (pos-w, pos] only, across chunk boundaries."""
+    key = jax.random.PRNGKey(1)
+    q, k, v = _qkv(key, B=1, S=48, H=2, KVH=2)
+    window = 20
+    ref = attend(q, k, v, window=window)
+
+    # manual chunked evaluation with n_halo left chunks
+    L, n_chunks = 12, 4
+    n_halo = -(-window // L)
+    outs = []
+    from repro.models.attention import _online_block_scan
+
+    for c in range(n_chunks):
+        lo = max(0, (c - n_halo) * L)
+        span_lo = (c - n_halo) * L
+        k_span = jnp.concatenate(
+            [jnp.zeros((1, lo - span_lo, 2, 16), jnp.float32),
+             k[:, lo:(c + 1) * L]], axis=1)
+        v_span = jnp.concatenate(
+            [jnp.zeros((1, lo - span_lo, 2, 16), jnp.float32),
+             v[:, lo:(c + 1) * L]], axis=1)
+        kv_pos = span_lo + jnp.arange((n_halo + 1) * L, dtype=jnp.int32)
+        q_pos = c * L + jnp.arange(L, dtype=jnp.int32)
+        qr = q[:, c * L:(c + 1) * L].reshape(1, L, 2, 1, 16)
+        o = _online_block_scan(qr, k_span, v_span, q_pos, kv_pos, window,
+                               16**-0.5)
+        outs.append(o.reshape(1, L, 2, 16))
+    out = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
