@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Standing perf/correctness gate for the secure-aggregation hot path.
+#
+# Runs tier-1 tests, then a small-size secure_overhead smoke with BOTH
+# backends and asserts (a) revealed-sum exactness on every row and (b) the
+# fused Pallas pipeline is not slower than the reference oracle.  Run this
+# before merging anything that touches src/repro/core or
+# src/repro/kernels/shamir_*.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== secure_overhead smoke (both backends) =="
+python benchmarks/secure_overhead.py \
+    --backend reference pallas \
+    --sizes 10000 100000 --repeats 2 \
+    --json BENCH_secure_overhead_smoke.json >/dev/null
+
+python - <<'EOF'
+import json, sys
+
+rows = json.load(open("BENCH_secure_overhead_smoke.json"))
+failures = []
+for r in rows:
+    if "max_abs_err" in r and not r["pass"]:
+        failures.append(f"revealed sum inexact: {r}")
+    if r.get("check", "").startswith("protection cost") and not r["pass"]:
+        failures.append(f"superlinear scaling: {r}")
+    if "speedup" in r:
+        print(f"pallas protect+reveal speedup: {r['speedup']:.2f}x "
+              f"(err delta {r['err_delta']:.3g})")
+        if r["speedup"] < 1.5:
+            failures.append(f"pallas speedup regressed below 1.5x: {r}")
+        if r["err_delta"] != 0.0:
+            failures.append(f"backends disagree on max_abs_err: {r}")
+if failures:
+    print("\n".join("FAIL: " + f for f in failures))
+    sys.exit(1)
+print("bench smoke OK")
+EOF

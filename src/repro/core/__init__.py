@@ -1,14 +1,22 @@
 """Paper core: secure, distributed L2-regularized logistic regression."""
 from .field import FIELD31, FIELD_WIDE, FieldSpec
 from .fixed_point import FixedPointCodec
+from .flatbuf import FlatLayout, pack_pytree, unpack_pytree
 from .shamir import ShamirScheme
-from .secure_agg import SecureAggregator, secure_add, secure_psum, secure_scale_by_public
+from .secure_agg import (
+    FlatProtected,
+    SecureAggregator,
+    secure_add,
+    secure_psum,
+    secure_scale_by_public,
+)
 from .logreg import LocalSummaries, local_summaries, predict_proba, deviance
 from .newton import FitResult, centralized_fit, newton_step, secure_fit
 from .protocol import ComputationCenter, Institution, RoundReport, StudyCoordinator
 
 __all__ = [
     "FIELD31", "FIELD_WIDE", "FieldSpec", "FixedPointCodec", "ShamirScheme",
+    "FlatLayout", "FlatProtected", "pack_pytree", "unpack_pytree",
     "SecureAggregator", "secure_add", "secure_psum", "secure_scale_by_public",
     "LocalSummaries", "local_summaries", "predict_proba", "deviance",
     "FitResult", "centralized_fit", "newton_step", "secure_fit",

@@ -35,9 +35,11 @@ __all__ = [
     "fsub",
     "fmul",
     "fneg",
+    "fsum",
     "fpow_host",
     "finv_host",
     "random_elements",
+    "random_elements_fast",
     "crt_combine_signed",
 ]
 
@@ -121,6 +123,23 @@ def fmul(a: jnp.ndarray, b: jnp.ndarray, field: FieldSpec,
     return (a * b) % field._bcast(a, residue_axis)
 
 
+def fsum(stacked: jnp.ndarray, field: FieldSpec, axis: int = 0,
+         residue_axis: int = 1) -> jnp.ndarray:
+    """Reduce a stacked batch of field tensors mod p in ONE pass.
+
+    ``stacked`` is (S, ..., R, ...) with the residue axis given *after* the
+    reduction axis is removed.  The sum runs exact in uint64 (S * p < 2**64
+    for any S < 2**33) and reduces mod p once — replacing S-1 pairwise
+    ``fadd`` dispatches with a single reduction.  Accepts uint32 share
+    tensors (the Pallas flat pipeline's wire format) and returns the input
+    dtype.
+    """
+    dtype = stacked.dtype
+    s = jnp.sum(stacked.astype(jnp.uint64), axis=axis)
+    _check(s, field, residue_axis)
+    return (s % field._bcast(s, residue_axis)).astype(dtype)
+
+
 def fpow_host(base: int, exp: int, p: int) -> int:
     return pow(int(base), int(exp), int(p))
 
@@ -144,6 +163,26 @@ def random_elements(
     for r, p in enumerate(field.moduli):
         v = jax.random.randint(keys[r], shape, 0, p, dtype=jnp.int64)
         outs.append(v.astype(jnp.uint64))
+    return jnp.stack(outs, axis=0)
+
+
+def random_elements_fast(
+    key: jax.Array, shape: tuple[int, ...], field: FieldSpec
+) -> jnp.ndarray:
+    """Near-uniform random field elements, shape (R, *shape), as uint64.
+
+    One 64-bit draw reduced mod p per element: modulo bias is p / 2**64
+    < 2**-33 — statistically negligible for share-polynomial coefficients,
+    and ~5x faster than ``random_elements``'s exact rejection-free randint
+    path (which draws and combines twice per element).  The fused Pallas
+    protect pipeline uses this; the reference oracle keeps the exact
+    sampler.
+    """
+    keys = jax.random.split(key, field.num_residues)
+    outs = []
+    for r, p in enumerate(field.moduli):
+        v = jax.random.bits(keys[r], shape, jnp.uint64)
+        outs.append(v % jnp.uint64(p))
     return jnp.stack(outs, axis=0)
 
 

@@ -12,6 +12,12 @@ share-wise homomorphic ops) is exact in the field as long as the aggregate
 magnitude stays below ``field.max_signed / 2**frac_bits``.  ``capacity()``
 exposes that bound so protocol code can assert headroom (e.g. S institutions
 x max |H_ij| each).  Quantization happens once, at encode time.
+
+The Pallas backend fuses this codec into the share/reconstruct kernels
+(``kernels.shamir_poly.shamir_encode_share_pallas`` mirrors ``encode``
+bit-for-bit via an exact float hi/lo split; the reconstruct kernel emits
+the Garner digit that ``decode``'s CRT recombination needs) — this module
+remains the leaf-wise oracle those kernels are tested against.
 """
 from __future__ import annotations
 

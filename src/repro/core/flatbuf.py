@@ -1,0 +1,98 @@
+"""Flat-buffer pytree codec for the fused secure-aggregation pipeline.
+
+The reference secure path walks the summary pytree leaf by leaf: one
+encode, one share kernel, one reconstruct per leaf, per institution.  That
+makes protect/aggregate/reveal cost O(num_leaves) dispatches — interpreter
+overhead, not algorithm.  This module packs an arbitrary float pytree into
+ONE contiguous ``(rows, 128)`` tile buffer (the Pallas lane layout used by
+``kernels/ops.py``) so each protocol phase is a single kernel launch
+regardless of pytree shape.
+
+Layout contract:
+
+* Leaves are raveled in ``tree_flatten`` order and concatenated.
+* The tail is zero-padded up to ``rows * 128`` with ``rows`` a multiple of
+  ``row_align`` (8 — the float32 sublane tile; also fine for uint32).
+* ``FlatLayout`` remembers treedef + shapes + dtypes so ``unpack`` is exact.
+
+Padding is benign end to end: zero floats encode to residue 0, shares of 0
+aggregate to shares of 0, and the revealed tail is dropped by ``unpack``.
+The layout is static (hashable) so jitted pipelines treat it as a compile-
+time constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FlatLayout", "pack_pytree", "unpack_pytree"]
+
+LANES = 128
+ROW_ALIGN = 8  # float32 / uint32 sublane tile
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static description of how a pytree maps into one (rows, 128) buffer."""
+
+    treedef: jax.tree_util.PyTreeDef
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[str, ...]
+    rows: int
+
+    @property
+    def num_elements(self) -> int:
+        return sum(int(np.prod(s, dtype=np.int64)) for s in self.shapes)
+
+    @property
+    def padded(self) -> int:
+        return self.rows * LANES
+
+    def __hash__(self):
+        return hash((self.treedef, self.shapes, self.dtypes, self.rows))
+
+
+def _rows_for(n: int, row_align: int) -> int:
+    rows = max(1, -(-n // LANES))
+    return -(-rows // row_align) * row_align
+
+
+def pack_pytree(
+    tree, dtype=None, row_align: int = ROW_ALIGN
+) -> tuple[jnp.ndarray, FlatLayout]:
+    """Pack a float pytree into one zero-padded (rows, 128) buffer.
+
+    ``dtype`` defaults to the promoted dtype of the leaves (float64 trees
+    stay float64 — required for exact fixed-point encode past 2**24).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("cannot pack an empty pytree")
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(str(jnp.asarray(l).dtype) for l in leaves)
+    if dtype is None:
+        dtype = jnp.result_type(*[jnp.asarray(l).dtype for l in leaves])
+    flat = jnp.concatenate(
+        [jnp.ravel(jnp.asarray(l)).astype(dtype) for l in leaves]
+    )
+    rows = _rows_for(flat.size, row_align)
+    buf = jnp.pad(flat, (0, rows * LANES - flat.size)).reshape(rows, LANES)
+    return buf, FlatLayout(treedef, shapes, dtypes, rows)
+
+
+def unpack_pytree(buf: jnp.ndarray, layout: FlatLayout, dtype=None):
+    """Invert ``pack_pytree``: (rows, 128) buffer -> original pytree.
+
+    ``dtype`` overrides the per-leaf restore dtype (e.g. reveal to float32).
+    """
+    flat = buf.reshape(-1)
+    leaves, offset = [], 0
+    for shape, ldt in zip(layout.shapes, layout.dtypes):
+        n = int(np.prod(shape, dtype=np.int64))
+        out_dt = dtype if dtype is not None else ldt
+        leaves.append(flat[offset:offset + n].reshape(shape).astype(out_dt))
+        offset += n
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)

@@ -4,8 +4,9 @@ The homomorphism that makes the paper's protocol cheap: if A and B are
 secret-shared with the *same* evaluation points, then share-wise addition
 yields valid shares of A+B (Algorithm 2), and share-wise multiplication by a
 public constant c yields valid shares of c*A.  Aggregating S institutions'
-summaries therefore costs S-1 uint64 adds per share — no interaction between
-Computation Centers until the final (aggregate-only) reconstruction.
+summaries therefore costs one field reduction over the S axis — no
+interaction between Computation Centers until the final (aggregate-only)
+reconstruction.
 
 Two deployment styles:
 
@@ -16,22 +17,56 @@ Two deployment styles:
   axis performs Algorithm 2 across institutions *share-wise in the field*,
   and only the global sum is reconstructed.  This is the drop-in replacement
   for a plain gradient all-reduce used by `--secure-agg shamir` training.
+
+Backends and the flat-buffer hot path
+-------------------------------------
+``SecureAggregator(backend="reference")`` walks the summary pytree leaf by
+leaf through the uint64 jnp oracle — one dispatch per leaf per field op.
+
+``backend="pallas"`` runs the fused pipeline: the float pytree is packed
+into ONE contiguous (rows, 128) tile buffer (`flatbuf.pack_pytree` — pad
+once, remember the layout), so each phase is a single kernel launch
+regardless of leaf count:
+
+* ``protect``  — fused fixed-point encode + Horner share evaluation
+  (`kernels.shamir_poly.shamir_encode_share_pallas`); the intermediate
+  uint64 encoded tensor never materializes.  Returns a `FlatProtected`.
+* ``aggregate`` — one stacked uint64 reduction over the institution axis
+  (`field.fsum`), S-way in a single dispatch.
+* ``reveal``   — fused Lagrange reconstruction + CRT Garner digit
+  (`kernels.shamir_reconstruct`), then unpack back to the original pytree.
+
+Share slices travel as uint32 (half the bytes of the reference uint64
+path).  `FlatProtected` is a registered pytree whose only leaf is the
+share buffer, so protocol code can slice/stack it with ``tree_map``
+exactly like a plain share pytree.  All three phases are jitted with the
+layout/scheme as static arguments.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .field import FieldSpec, FIELD_WIDE, fadd, fmul
+from .field import (
+    FieldSpec,
+    FIELD_WIDE,
+    fadd,
+    fmul,
+    fsum,
+    random_elements_fast,
+)
 from .fixed_point import FixedPointCodec
+from .flatbuf import FlatLayout, LANES, pack_pytree, unpack_pytree
 from .shamir import ShamirScheme
 
 __all__ = [
     "secure_add",
     "secure_scale_by_public",
+    "FlatProtected",
     "SecureAggregator",
     "secure_psum",
 ]
@@ -56,14 +91,88 @@ def secure_scale_by_public(shares, const_field: jnp.ndarray, field: FieldSpec,
     )
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FlatProtected:
+    """Protected flat-buffer representation: one uint32 share tensor.
+
+    ``buf`` is (w, R, rows, 128) fresh from ``protect`` (holder axis
+    leading), (R, rows, 128) after per-center slicing, or (k, R, rows, 128)
+    once >= t centers stack their aggregate slices for reveal.  ``layout``
+    (static aux data) remembers how to unpack the revealed buffer back into
+    the original pytree.  Registered as a pytree so protocol-level
+    ``tree_map`` slicing/stacking works transparently.
+    """
+
+    buf: jnp.ndarray
+    layout: FlatLayout
+
+    def tree_flatten(self):
+        return (self.buf,), self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, children):
+        return cls(children[0], layout)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("field", "residue_axis")
+)
+def _fsum_batched(stacked, field: FieldSpec, residue_axis: int):
+    """Jitted S-way field reduction (cast + sum + mod fused by XLA)."""
+    return fsum(stacked, field, axis=0, residue_axis=residue_axis)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scheme", "frac_bits", "rows")
+)
+def _protect_flat(key, buf, scheme: ShamirScheme, frac_bits: int, rows: int):
+    from ..kernels import ops
+
+    field = scheme.field
+    coeffs = random_elements_fast(
+        key, (scheme.threshold - 1, rows, LANES), field
+    ).astype(jnp.uint32)  # (R, t-1, rows, 128)
+    return ops.shamir_protect_flat(
+        buf, coeffs, scheme.num_shares, field.moduli, frac_bits,
+        interpret=scheme.interpret,
+    )  # (w, R, rows, 128) uint32
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scheme", "frac_bits", "points")
+)
+def _reveal_flat(buf, scheme: ShamirScheme, frac_bits: int,
+                 points: tuple[int, ...]):
+    from ..kernels import ops
+
+    return ops.shamir_reveal_flat(
+        buf, points, scheme.field.moduli, frac_bits,
+        interpret=scheme.interpret,
+    )  # (rows, 128) float64
+
+
 @dataclasses.dataclass(frozen=True)
 class SecureAggregator:
-    """End-to-end protect -> aggregate -> reveal pipeline for float pytrees."""
+    """End-to-end protect -> aggregate -> reveal pipeline for float pytrees.
+
+    ``backend=None`` inherits the scheme's backend; passing "pallas" or
+    "reference" overrides the scheme to match (convenience so callers can
+    write ``SecureAggregator(backend="pallas")``).
+    """
 
     scheme: ShamirScheme = ShamirScheme()
     codec: FixedPointCodec = FixedPointCodec()
+    backend: str | None = None
 
     def __post_init__(self):
+        if self.backend is None:
+            object.__setattr__(self, "backend", self.scheme.backend)
+        elif self.backend != self.scheme.backend:
+            object.__setattr__(
+                self, "scheme",
+                dataclasses.replace(self.scheme, backend=self.backend),
+            )
         if self.scheme.field is not self.codec.field and (
             self.scheme.field.moduli != self.codec.field.moduli
         ):
@@ -71,19 +180,41 @@ class SecureAggregator:
 
     # institution side --------------------------------------------------------
     def protect(self, key: jax.Array, tree):
-        """Encode floats to the field and split into shares (w, R, ...)."""
+        """Encode floats to the field and split into shares.
+
+        Reference backend: per-leaf share pytree of (w, R, ...) uint64.
+        Pallas backend: a single ``FlatProtected`` share buffer.
+        """
+        if self.backend == "pallas":
+            buf, layout = pack_pytree(tree)
+            shares = _protect_flat(
+                key, buf, self.scheme, self.codec.frac_bits, layout.rows
+            )
+            return FlatProtected(shares, layout)
         encoded = jax.tree_util.tree_map(self.codec.encode, tree)
         return self.scheme.share_pytree(key, encoded)
 
     # computation-center side -------------------------------------------------
     def aggregate(self, protected: Sequence):
-        """Share-wise sum over institutions (still protected)."""
+        """Share-wise sum over institutions (still protected).
+
+        Stacks the S submissions and reduces in one fused pass per leaf
+        (a single pass total for the flat pallas representation) instead of
+        S-1 pairwise adds.
+        """
         if not protected:
             raise ValueError("nothing to aggregate")
-        acc = protected[0]
-        for p in protected[1:]:
-            acc = secure_add(acc, p, self.scheme.field, residue_axis=1)
-        return acc
+        if len(protected) == 1:
+            return protected[0]
+        field = self.scheme.field
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *protected
+        )
+        # leaves are (S, w, R, ...) protect outputs: after reducing S the
+        # residue axis sits at position 1 (same contract as secure_add)
+        return jax.tree_util.tree_map(
+            lambda s: _fsum_batched(s, field, residue_axis=1), stacked
+        )
 
     def reveal(self, protected, points=None, dtype=jnp.float64):
         """Joint reconstruction of the (aggregate) secret -> floats.
@@ -91,6 +222,23 @@ class SecureAggregator:
         In deployment this is the only step that requires >= t centers to
         cooperate, and it is only ever invoked on *global* aggregates.
         """
+        if isinstance(protected, FlatProtected):
+            k = protected.buf.shape[0]
+            pts = tuple(points) if points is not None else tuple(
+                range(1, k + 1)
+            )
+            if len(pts) != k:
+                raise ValueError("points must match share count")
+            if k < self.scheme.threshold:
+                raise ValueError(
+                    f"need >= t={self.scheme.threshold} shares, got {k} "
+                    "(information-theoretically irrecoverable below "
+                    "threshold)"
+                )
+            flat = _reveal_flat(
+                protected.buf, self.scheme, self.codec.frac_bits, pts
+            )
+            return unpack_pytree(flat, protected.layout, dtype=dtype)
         recon = self.scheme.reconstruct_pytree(protected, points)
         return jax.tree_util.tree_map(
             lambda v: self.codec.decode(v, dtype=dtype), recon
@@ -124,11 +272,11 @@ def secure_psum(tree, axis_name: str, key: jax.Array,
     def field_psum(shares):
         # uint64 psum is exact; reduce mod p afterwards (S * p < 2**64 for
         # any realistic institution count, guard: S < 2**31).
-        summed = jax.lax.psum(shares, axis_name)
+        summed = jax.lax.psum(shares.astype(jnp.uint64), axis_name)
         p = agg.scheme.field.moduli_array().reshape(
             (1, agg.scheme.field.num_residues) + (1,) * (shares.ndim - 2)
         )
-        return summed % p
+        return (summed % p).astype(shares.dtype)
 
     aggregated = jax.tree_util.tree_map(field_psum, protected)
     return agg.reveal(aggregated, dtype=dtype)

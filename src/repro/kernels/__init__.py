@@ -3,6 +3,12 @@
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), a jit'd wrapper in
 ops.py, and a pure-jnp oracle in ref.py.  Validated in interpret mode on CPU
 (tests/test_kernels.py); written against TPU VMEM/MXU semantics.
+
+The secure-aggregation pipeline is fully kernelized: ``shamir_poly``
+(share generation + fused fixed-point encode) and ``shamir_reconstruct``
+(Lagrange interpolation + CRT Garner digit) cover protect and reveal end
+to end over flat (rows, 128) tile buffers — see ``core.secure_agg`` for
+the backend switch that routes production traffic through them.
 """
 from . import ops, ref
 

@@ -15,9 +15,14 @@ import numpy as np
 
 from .fused_logistic import fused_logistic_pallas
 from .gram_hessian import gram_hessian_pallas
-from .shamir_poly import shamir_poly_pallas
+from .shamir_poly import shamir_encode_share_pallas, shamir_poly_pallas
+from .shamir_reconstruct import (
+    lagrange_weights_host,
+    shamir_reconstruct_pallas,
+)
 
 __all__ = ["gram_hessian", "fused_logistic", "shamir_shares",
+           "shamir_reconstruct", "shamir_protect_flat", "shamir_reveal_flat",
            "flash_attention", "flash_attention_bwd"]
 
 
@@ -84,6 +89,119 @@ def shamir_shares(
         block_rows=block_rows, interpret=interpret,
     )
     return out.reshape(num_shares, total)[:, :n].astype(secret.dtype)
+
+
+def _flat_blocking(rows: int, interpret: bool) -> tuple[int, int]:
+    """(rows_padded, block_rows) for an already (rows, 128)-tiled buffer.
+
+    Interpret mode runs the grid as a Python loop, so a single whole-buffer
+    program minimizes dispatch overhead; compiled TPU mode tiles to VMEM-
+    sized blocks.
+    """
+    if interpret:
+        return rows, rows
+    block_rows = min(256, rows)
+    rows_pad = int(np.ceil(rows / block_rows) * block_rows)
+    return rows_pad, block_rows
+
+
+def _pad_rows(x, rows_pad, axis):
+    pad = rows_pad - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def shamir_protect_flat(
+    buf: jnp.ndarray,  # (rows, 128) float payload tiles
+    coeffs: jnp.ndarray,  # (R, t-1, rows, 128) uint32, reduced per residue
+    num_shares: int,
+    moduli: tuple[int, ...],
+    frac_bits: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused fixed-point encode + share of a flat buffer in ONE launch.
+
+    Returns (num_shares, R, rows, 128) uint32 — the holder axis leads so a
+    Computation Center's slice is ``out[j]``.  Zero-padded tail rows encode
+    to zero shares (benign through aggregate/reveal).
+    """
+    rows = buf.shape[0]
+    rows_pad, block_rows = _flat_blocking(rows, interpret)
+    bufp = _pad_rows(buf, rows_pad, 0)
+    coeffsp = _pad_rows(coeffs, rows_pad, 2)
+    if coeffsp.shape[1] == 0:  # t = 1: a zero high coefficient is a no-op
+        coeffsp = jnp.zeros(
+            (coeffs.shape[0], 1) + bufp.shape, dtype=jnp.uint32
+        )
+    out = shamir_encode_share_pallas(
+        bufp, coeffsp, num_shares, tuple(moduli), frac_bits,
+        block_rows=block_rows, interpret=interpret,
+    )  # (R, w, rows_pad, 128)
+    return jnp.swapaxes(out, 0, 1)[:, :, :rows]
+
+
+def shamir_reveal_flat(
+    shares: jnp.ndarray,  # (k, R, rows, 128) uint32 aggregate share slices
+    points: tuple[int, ...],  # public 1-based holder ids of the k slices
+    moduli: tuple[int, ...],
+    frac_bits: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused Lagrange reconstruction + CRT decode -> (rows, 128) float64.
+
+    The modular hot loop (k multiply-adds per residue + the Garner digit)
+    runs in one kernel launch; only the final uint64 recombination and the
+    fixed-point rescale are host-graph elementwise ops.
+    """
+    k, num_residues, rows = shares.shape[0], shares.shape[1], shares.shape[2]
+    assert len(points) == k
+    rows_pad, block_rows = _flat_blocking(rows, interpret)
+    stacked = _pad_rows(jnp.swapaxes(shares, 0, 1), rows_pad, 2)
+    lams = lagrange_weights_host(tuple(points), tuple(moduli))
+    garner = num_residues == 2
+    rec = shamir_reconstruct_pallas(
+        stacked, lams, tuple(moduli), garner=garner,
+        block_rows=block_rows, interpret=interpret,
+    )[:, :rows]  # (R, rows, 128)
+    modulus_product = 1
+    for p in moduli:
+        modulus_product *= p
+    half = jnp.uint64((modulus_product - 1) // 2)
+    if garner:
+        # x = r1 + p1 * k_digit < p1*p2 < 2**62: exact in uint64
+        x = rec[0].astype(jnp.uint64) + jnp.uint64(moduli[0]) * rec[1].astype(
+            jnp.uint64
+        )
+    else:
+        x = rec[0].astype(jnp.uint64)
+    neg = -((jnp.uint64(modulus_product) - x).astype(jnp.int64))
+    signed = jnp.where(x <= half, x.astype(jnp.int64), neg)
+    return signed.astype(jnp.float64) / jnp.float64(1 << frac_bits)
+
+
+def shamir_reconstruct(
+    secret_shares: jnp.ndarray,  # (k, n) uint32/uint64, reduced mod modulus
+    points,  # 1-based evaluation points of the k share rows
+    modulus: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(n,) reconstructed secret — per-residue mirror of shamir_shares."""
+    assert modulus < 2**31, "kernel field elements must fit 31 bits"
+    k, n = secret_shares.shape
+    rows = max(1, int(np.ceil(n / 128)))
+    rows_pad, block_rows = _flat_blocking(rows, interpret)
+    total = rows_pad * 128
+    flat = jnp.pad(secret_shares.astype(jnp.uint32), ((0, 0), (0, total - n)))
+    tiles = flat.reshape(1, k, rows_pad, 128)
+    lams = lagrange_weights_host(tuple(points), (modulus,))
+    out = shamir_reconstruct_pallas(
+        tiles, lams, (modulus,), garner=False,
+        block_rows=block_rows, interpret=interpret,
+    )
+    return out.reshape(total)[:n].astype(secret_shares.dtype)
 
 
 def flash_attention(q, k, v, block_q: int = 512, block_k: int = 512,

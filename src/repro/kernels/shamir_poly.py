@@ -29,7 +29,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["shamir_poly_pallas", "mulmod31", "addmod"]
+__all__ = [
+    "shamir_poly_pallas",
+    "shamir_encode_share_pallas",
+    "mulmod31",
+    "addmod",
+]
 
 DEFAULT_BLOCK_ROWS = 256
 MASK31 = np.uint32(2**31 - 1)  # numpy scalar: safe inside pallas kernels
@@ -123,3 +128,103 @@ def shamir_poly_pallas(
         ),
         interpret=interpret,
     )(secret, coeffs)
+
+
+def _float_mod(s_abs, neg, p: int):
+    """|s| (float, integer-valued, < 2**62) mod p, sign-corrected, as uint32.
+
+    Exploits that a rounded float has at most mantissa-many significant
+    bits: splitting at 2**31 via divide/floor/multiply-subtract is EXACT
+    (both halves inherit <= mantissa bits), giving hi < 2**30 and
+    lo < 2**31 that fit uint32, then 2**31 === c (mod p) folds the split.
+    """
+    c = 2**31 - p
+    hi_f = jnp.floor(s_abs * (2.0**-31))
+    lo_f = s_abs - hi_f * (2.0**31)
+    hi = hi_f.astype(jnp.uint32)
+    lo = lo_f.astype(jnp.uint32)
+    m = addmod(_fold(lo, p, c), mulmod31(hi, np.uint32(c), p), p)
+    pp = np.uint32(p)
+    return jnp.where(neg & (m > 0), pp - m, m)
+
+
+def _encode_share_kernel(
+    x_ref, coeffs_ref, out_ref, *, num_shares, moduli, scale, max_signed
+):
+    t_minus_1 = coeffs_ref.shape[1]
+    x = x_ref[...]
+    s = jnp.clip(jnp.round(x * scale), -float(max_signed), float(max_signed))
+    neg = s < 0
+    s_abs = jnp.abs(s)
+    for r, p in enumerate(moduli):
+        secret = _float_mod(s_abs, neg, p)
+        for j in range(1, num_shares + 1):
+            xj = np.uint32(j)
+            acc = jnp.zeros_like(secret)
+            for k in range(t_minus_1 - 1, -1, -1):
+                acc = addmod(mulmod31(acc, xj, p), coeffs_ref[r, k], p)
+            out_ref[r, j - 1, ...] = addmod(
+                mulmod31(acc, xj, p), secret, p
+            )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_shares", "moduli", "frac_bits", "block_rows", "interpret"
+    ),
+)
+def shamir_encode_share_pallas(
+    x: jnp.ndarray,  # (rows, 128) float32/float64 payload
+    coeffs: jnp.ndarray,  # (R, t-1, rows, 128) uint32, reduced per residue
+    num_shares: int,
+    moduli: tuple[int, ...],
+    frac_bits: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused fixed-point encode + Horner share evaluation, all residues in
+    one launch.  Returns (R, num_shares, rows, 128) uint32 — the uint64
+    encoded tensor of the two-stage path never materializes.
+
+    Equivalent to ``FixedPointCodec.encode`` followed by the share kernel:
+    s = round(x * 2**frac_bits) clipped to +-max_signed, lifted to residues
+    via the exact float split in ``_float_mod`` (float64 payloads are exact
+    to the codec's full 61-bit range; float32 payloads to 2**24 * scale —
+    on-TPU deployments feed f32 and rely on the same contract).
+    """
+    rows, lanes = x.shape
+    assert lanes == 128 and rows % block_rows == 0, "ops.py reshapes/pads"
+    num_residues, t_minus_1 = coeffs.shape[0], coeffs.shape[1]
+    assert len(moduli) == num_residues
+    max_signed = 1
+    for p in moduli:
+        max_signed *= p
+    max_signed = (max_signed - 1) // 2
+    grid = (rows // block_rows,)
+    kernel = functools.partial(
+        _encode_share_kernel,
+        num_shares=num_shares,
+        moduli=moduli,
+        scale=float(1 << frac_bits),
+        max_signed=max_signed,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+            pl.BlockSpec(
+                (num_residues, t_minus_1, block_rows, 128),
+                lambda i: (0, 0, i, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (num_residues, num_shares, block_rows, 128),
+            lambda i: (0, 0, i, 0),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (num_residues, num_shares, rows, 128), jnp.uint32
+        ),
+        interpret=interpret,
+    )(x, coeffs)

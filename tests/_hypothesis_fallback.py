@@ -1,0 +1,153 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite uses a small slice of the hypothesis API (``given``,
+``settings``, ``strategies.integers/lists/floats/sampled_from/data``).  The
+container image does not ship hypothesis and the no-new-deps rule forbids
+installing it, so ``conftest.py`` registers this module under the name
+``hypothesis`` when the real package is missing.  It draws from a seeded
+``random.Random`` so the property tests still *run* (deterministically),
+rather than being skipped wholesale.  With the real package installed
+(``pip install -r requirements-dev.txt``) this module is never imported.
+
+Not implemented: shrinking, the example database, ``assume``, stateful
+testing.  Tests here only need plain randomized example generation.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__version__ = "0.0-fallback"
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    """A draw function wrapped so strategies compose (lists of integers)."""
+
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"_Strategy({self._label})"
+
+
+class _DataObject:
+    """Mirror of hypothesis' ``st.data()`` draw handle."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.example(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng), "data")
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: rng.randint(min_value, max_value),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def floats(min_value, max_value, allow_nan=False, allow_infinity=False,
+           width=64):
+    def draw(rng):
+        v = rng.uniform(min_value, max_value)
+        if width == 32:
+            import struct
+
+            v = struct.unpack("f", struct.pack("f", v))[0]
+            # float32 rounding can step just past the bounds; clamp back
+            v = min(max(v, min_value), max_value)
+        return v
+
+    return _Strategy(draw, f"floats({min_value}, {max_value})")
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        k = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(k)]
+
+    return _Strategy(draw, f"lists(..., {min_size}, {max_size})")
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq), f"sampled_from({seq!r})")
+
+
+def data():
+    return _DataStrategy()
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator: attach example-count config to a test function."""
+
+    def apply(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return apply
+
+
+def given(**strategy_kwargs):
+    """Run the test ``max_examples`` times with freshly drawn examples.
+
+    The wrapper's signature hides the strategy parameters from pytest (so it
+    does not look for fixtures named after them) while keeping any
+    ``parametrize`` / fixture parameters visible.
+    """
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        passthrough = [
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs
+        ]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(
+                wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            # deterministic per-test seed: crc32 is salt-free (unlike
+            # hash(), which PYTHONHASHSEED randomizes per process), so
+            # draws reproduce across runs and workers
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode()
+            )
+            rng = random.Random(seed)
+            for _ in range(max_examples):
+                drawn = {
+                    name: strat.example(rng)
+                    for name, strat in strategy_kwargs.items()
+                }
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        return wrapper
+
+    return decorate
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    lists = staticmethod(lists)
+    sampled_from = staticmethod(sampled_from)
+    data = staticmethod(data)
+
+
+strategies = _StrategiesModule()

@@ -1,6 +1,22 @@
 # NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
 # benchmarks must see the real single CPU device; only launch/dryrun.py (run
 # as a subprocess) forces 512 placeholder devices.
+import pathlib
+import sys
+
+# Property tests import hypothesis; the container does not ship it and tier-1
+# must collect everywhere.  Register a deterministic fallback shim under the
+# ``hypothesis`` name when the real package is missing (see
+# _hypothesis_fallback.py; install requirements-dev.txt for the real thing).
+try:  # pragma: no cover - trivially environment-dependent
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).parent))
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies
+
 import jax
 import pytest
 

@@ -87,6 +87,82 @@ def test_mulmod31_edge_cases(p):
 
 
 @pytest.mark.parametrize("p", [P31, P31B])
+def test_mulmod31_adversarial_vs_bigint(p):
+    """Vectorized sweep of limb-boundary / near-modulus operand pairs
+    against Python big-int ground truth (the oracle the limb decomposition
+    must reproduce exactly)."""
+    corners = [
+        0, 1, 2, 3,
+        0x7FFF, 0x8000, 0x8001,            # 2**15 boundary (shl16 split)
+        0xFFFF, 0x10000, 0x10001,          # 2**16 limb boundary
+        0xFFFF_FFFF % p, (2**30 - 1), 2**30, 2**30 + 1,
+        p - 1, p - 2, p - 19, p - 20,      # near the modulus
+        (p - 1) // 2, (p + 1) // 2,
+    ]
+    a = np.asarray([x for x in corners for _ in corners], dtype=np.uint32)
+    b = np.asarray(corners * len(corners), dtype=np.uint32)
+    got = np.asarray(mulmod31(jnp.asarray(a), jnp.asarray(b), p))
+    want = (a.astype(object) * b.astype(object)) % p  # big-int, no overflow
+    np.testing.assert_array_equal(got, want.astype(np.uint32))
+
+
+@pytest.mark.parametrize("p", [P31, P31B])
+def test_addmod_adversarial_vs_bigint(p):
+    """addmod needs reduced inputs; sweep sums that straddle p exactly."""
+    corners = [0, 1, 2, 0xFFFF, 0x10000, 2**30, p // 2, p // 2 + 1,
+               p - 2, p - 1]
+    a = np.asarray([x for x in corners for _ in corners], dtype=np.uint32)
+    b = np.asarray(corners * len(corners), dtype=np.uint32)
+    got = np.asarray(addmod(jnp.asarray(a), jnp.asarray(b), p))
+    want = (a.astype(object) + b.astype(object)) % p
+    np.testing.assert_array_equal(got, want.astype(np.uint32))
+
+
+# ----------------------------------------------------------- shamir_reconstruct
+@pytest.mark.parametrize("p", [P31, P31B])
+@pytest.mark.parametrize("t,w", [(2, 3), (3, 5)])
+def test_shamir_reconstruct_kernel_inverts_shares(p, t, w):
+    """Kernel Lagrange reconstruction inverts the share kernel exactly,
+    including from non-contiguous point subsets."""
+    n = 513
+    k1, k2 = jax.random.split(jax.random.PRNGKey(w * 10 + t))
+    secret = jax.random.randint(k1, (n,), 0, p, dtype=jnp.int64).astype(
+        jnp.uint64
+    )
+    coeffs = jax.random.randint(
+        k2, (t - 1, n), 0, p, dtype=jnp.int64
+    ).astype(jnp.uint64)
+    shares = ops.shamir_shares(secret, coeffs, w, p)
+    subsets = [list(range(1, t + 1)), [1] + list(range(w - t + 2, w + 1))]
+    for pts in subsets:
+        sub = shares[jnp.asarray([q - 1 for q in pts])]
+        rec = ops.shamir_reconstruct(sub, pts, p)
+        np.testing.assert_array_equal(np.asarray(rec), np.asarray(secret))
+
+
+def test_shamir_reveal_flat_garner_matches_codec():
+    """Fused reconstruct+CRT-decode == FixedPointCodec.decode, FIELD_WIDE."""
+    from repro.core.field import FIELD_WIDE
+    from repro.core.fixed_point import FixedPointCodec
+    from repro.core.shamir import ShamirScheme
+
+    codec = FixedPointCodec()
+    sch = ShamirScheme(threshold=2, num_shares=3, field=FIELD_WIDE)
+    rows = 8
+    x = 100.0 * jax.random.normal(
+        jax.random.PRNGKey(3), (rows, 128), jnp.float64
+    )
+    enc = codec.encode(x)  # (R, rows, 128)
+    shares = sch.share(jax.random.PRNGKey(4), enc)  # (w, R, rows, 128)
+    got = ops.shamir_reveal_flat(
+        shares.astype(jnp.uint32), (1, 2, 3), FIELD_WIDE.moduli,
+        codec.frac_bits,
+    )
+    want = codec.decode(sch.reconstruct(shares))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("p", [P31, P31B])
 @pytest.mark.parametrize("t,w", [(2, 3), (3, 5), (5, 9)])
 @pytest.mark.parametrize("n", [1, 100, 4096])
 def test_shamir_kernel_matches_ref(p, t, w, n):

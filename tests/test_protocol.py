@@ -1,4 +1,9 @@
-"""Fault-tolerance behaviour of the Algorithm-1 coordinator."""
+"""Fault-tolerance behaviour of the Algorithm-1 coordinator.
+
+The whole module runs under BOTH secure-aggregation backends (the uint64
+reference oracle and the fused Pallas flat-buffer pipeline) — the protocol
+semantics must be identical through either.
+"""
 import jax
 import numpy as np
 import pytest
@@ -13,6 +18,11 @@ from repro.core import (
 from repro.data import generate_synthetic
 
 
+@pytest.fixture(params=["reference", "pallas"])
+def backend(request):
+    return request.param
+
+
 def make_insts(num=4, n=300, dim=6, latencies=None):
     study = generate_synthetic(
         jax.random.PRNGKey(11), num_institutions=num,
@@ -25,17 +35,22 @@ def make_insts(num=4, n=300, dim=6, latencies=None):
     ]
 
 
-def test_full_cohort_matches_gold():
+def test_full_cohort_matches_gold(backend):
     study, insts = make_insts()
-    coord = StudyCoordinator(insts, lam=1.0, protect="both")
+    coord = StudyCoordinator(
+        insts, lam=1.0, protect="both",
+        aggregator=SecureAggregator(backend=backend),
+    )
     beta = coord.run()
     gold = centralized_fit(*study.pooled(), lam=1.0)
     np.testing.assert_allclose(beta, gold.beta, atol=1e-6)
 
 
-def test_center_failures_within_threshold_are_free():
+def test_center_failures_within_threshold_are_free(backend):
     study, insts = make_insts()
-    agg = SecureAggregator(scheme=ShamirScheme(threshold=2, num_shares=5))
+    agg = SecureAggregator(
+        scheme=ShamirScheme(threshold=2, num_shares=5, backend=backend)
+    )
     coord = StudyCoordinator(insts, protect="both", aggregator=agg)
     coord.centers[0].online = False
     coord.centers[3].online = False
@@ -45,19 +60,22 @@ def test_center_failures_within_threshold_are_free():
     np.testing.assert_allclose(beta, gold.beta, atol=1e-6)
 
 
-def test_too_many_center_failures_detected():
+def test_too_many_center_failures_detected(backend):
     _, insts = make_insts()
-    coord = StudyCoordinator(insts, protect="both")
+    coord = StudyCoordinator(
+        insts, protect="both", aggregator=SecureAggregator(backend=backend)
+    )
     coord.centers[0].online = False
     coord.centers[1].online = False  # 1 alive < t=2
     with pytest.raises(RuntimeError, match="unrecoverable"):
         coord.step()
 
 
-def test_straggler_excluded_then_rejoins():
+def test_straggler_excluded_then_rejoins(backend):
     study, insts = make_insts(latencies=[0.0, 0.0, 0.0, 9.9])
     coord = StudyCoordinator(
-        insts, protect="gradient", deadline=1.0, min_responders=2
+        insts, protect="gradient", deadline=1.0, min_responders=2,
+        aggregator=SecureAggregator(backend=backend),
     )
     r1 = coord.step()
     assert r1.stragglers == ["inst3"]
@@ -73,9 +91,12 @@ def test_min_responders_enforced():
         coord.step()
 
 
-def test_elastic_membership():
+def test_elastic_membership(backend):
     study, insts = make_insts(num=4)
-    coord = StudyCoordinator(insts[:3], protect="gradient")
+    coord = StudyCoordinator(
+        insts[:3], protect="gradient",
+        aggregator=SecureAggregator(backend=backend),
+    )
     coord.step()
     coord.add_institution(insts[3])
     r = coord.step()
@@ -85,17 +106,40 @@ def test_elastic_membership():
     assert "inst0" not in r.responders
 
 
-def test_checkpoint_resume_bitexact():
+def test_checkpoint_resume_bitexact(backend):
     study, insts = make_insts()
-    a = StudyCoordinator(insts, protect="both", seed=5)
+    a = StudyCoordinator(
+        insts, protect="both", seed=5,
+        aggregator=SecureAggregator(backend=backend),
+    )
     for _ in range(2):
         a.step()
     state = a.state_dict()
     # clone coordinator, restore, then both must evolve identically
     b = StudyCoordinator(
-        [Institution(i.name, i.X, i.y) for i in insts], protect="both", seed=5
+        [Institution(i.name, i.X, i.y) for i in insts], protect="both",
+        seed=5, aggregator=SecureAggregator(backend=backend),
     )
     b.load_state_dict(state)
     ra, rb = a.step(), b.step()
     np.testing.assert_array_equal(np.asarray(a.beta), np.asarray(b.beta))
     assert ra.objective == rb.objective
+
+
+def test_backends_agree_bitexact():
+    """Reference and Pallas coordinators converge to identical traces: the
+    revealed aggregates are exact field sums either way, and the fused
+    float64 encode is bit-compatible with the codec."""
+    _, insts_a = make_insts()
+    _, insts_b = make_insts()
+    a = StudyCoordinator(
+        insts_a, protect="both", seed=7,
+        aggregator=SecureAggregator(backend="reference"),
+    )
+    b = StudyCoordinator(
+        insts_b, protect="both", seed=7,
+        aggregator=SecureAggregator(backend="pallas"),
+    )
+    beta_a, beta_b = a.run(), b.run()
+    np.testing.assert_array_equal(np.asarray(beta_a), np.asarray(beta_b))
+    assert a.trace == b.trace

@@ -1,0 +1,202 @@
+"""Fused secure-aggregation pipeline: backends, flat buffers, reconstruction.
+
+Pins down the contracts of the Pallas hot path against the reference
+oracle: bit-identical shares given the same coefficients, exact
+share -> aggregate -> reconstruct round trips (including non-contiguous
+reconstruction point subsets), and the flat-buffer codec layout.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.field import (
+    FIELD31,
+    FIELD_WIDE,
+    fsum,
+    lift_signed,
+    random_elements,
+)
+from repro.core.fixed_point import FixedPointCodec
+from repro.core.flatbuf import pack_pytree, unpack_pytree
+from repro.core.secure_agg import FlatProtected, SecureAggregator
+from repro.core.shamir import ShamirScheme
+from repro.kernels import ops
+
+FIELDS = [FIELD31, FIELD_WIDE]
+TW = [(2, 3), (3, 5)]
+
+
+def _schemes(t, w, field):
+    ref = ShamirScheme(threshold=t, num_shares=w, field=field,
+                       backend="reference")
+    pal = ShamirScheme(threshold=t, num_shares=w, field=field,
+                       backend="pallas")
+    return ref, pal
+
+
+# ---------------------------------------------------------- backend equality
+@pytest.mark.parametrize("t,w", TW)
+@pytest.mark.parametrize("field", FIELDS, ids=lambda f: f.name)
+def test_backends_bit_identical_shares(t, w, field, rng_key):
+    """Same coefficients => byte-for-byte identical share tensors."""
+    ref, pal = _schemes(t, w, field)
+    secret = lift_signed(
+        jnp.asarray([0, 1, -1, 123456, -(10**9), 7], dtype=jnp.int64), field
+    )
+    coeffs = random_elements(rng_key, (t - 1,) + secret.shape[1:], field)
+    a = ref.share_with_coeffs(secret, coeffs)
+    b = pal.share_with_coeffs(secret, coeffs)
+    assert a.dtype == b.dtype == jnp.uint64
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("t,w", TW)
+@pytest.mark.parametrize("field", FIELDS, ids=lambda f: f.name)
+def test_roundtrip_share_aggregate_reconstruct(t, w, field, rng_key):
+    """share -> share-wise aggregate -> reconstruct, kernel vs reference,
+    over non-contiguous reconstruction point subsets."""
+    ref, pal = _schemes(t, w, field)
+    vals = [
+        jnp.asarray([3, -17, 2**20, -(2**25), 0], dtype=jnp.int64),
+        jnp.asarray([100, 100, -100, 1, -1], dtype=jnp.int64),
+        jnp.asarray([-5, 123, 456, -789, 10], dtype=jnp.int64),
+    ]
+    secrets = [lift_signed(v, field) for v in vals]
+    keys = jax.random.split(rng_key, len(secrets))
+    shared = [pal.share(k, s) for k, s in zip(keys, secrets)]
+    stacked = jnp.stack(shared, axis=0)  # (S, w, R, n)
+    agg = fsum(stacked, field, axis=0, residue_axis=1)
+    total = lift_signed(sum(vals), field)
+    # every t-sized non-contiguous subset of points must reconstruct, on
+    # both backends, to the exact field encoding of the sum
+    subsets = [tuple(range(1, t + 1)), tuple(range(w - t + 1, w + 1))]
+    if w > t:
+        subsets.append((1,) + tuple(range(w - t + 2, w + 1)))  # gap subset
+    for pts in subsets:
+        idx = jnp.asarray([p - 1 for p in pts])
+        got_pal = pal.reconstruct(agg[idx], points=list(pts))
+        got_ref = ref.reconstruct(agg[idx], points=list(pts))
+        np.testing.assert_array_equal(np.asarray(got_pal), np.asarray(total))
+        np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(got_pal))
+
+
+# ------------------------------------------------------------- flat buffers
+def test_pack_unpack_roundtrip():
+    tree = {
+        "h": jnp.arange(9, dtype=jnp.float64).reshape(3, 3),
+        "g": jnp.asarray([1.5, -2.25], dtype=jnp.float32),
+        "dev": jnp.asarray(3.25, dtype=jnp.float64),
+    }
+    buf, layout = pack_pytree(tree)
+    assert buf.shape == (layout.rows, 128) and layout.rows % 8 == 0
+    assert layout.num_elements == 12
+    out = unpack_pytree(buf, layout)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(tree[k]))
+
+
+@pytest.mark.parametrize("field", FIELDS, ids=lambda f: f.name)
+def test_flat_pipeline_end_to_end(field, rng_key):
+    """protect -> aggregate -> reveal through FlatProtected, vs reference."""
+    codec = FixedPointCodec(field=field)
+    scale = 1.0 if field is FIELD31 else 1000.0  # stay inside capacity
+    tree = {
+        "a": scale * jnp.asarray([[0.5, -0.25], [1.0, 0.125]]),
+        "b": scale * jnp.asarray([0.75, -0.375, 0.0625]),
+    }
+    for backend in ("reference", "pallas"):
+        agg = SecureAggregator(
+            scheme=ShamirScheme(field=field, backend=backend), codec=codec
+        )
+        prot = [
+            agg.protect(jax.random.fold_in(rng_key, j), tree)
+            for j in range(3)
+        ]
+        if backend == "pallas":
+            assert isinstance(prot[0], FlatProtected)
+            assert prot[0].buf.dtype == jnp.uint32
+        summed = agg.aggregate(prot)
+        out = agg.reveal(summed)
+        for k in tree:
+            np.testing.assert_allclose(
+                np.asarray(out[k]), 3 * np.asarray(tree[k]),
+                atol=3 * 0.5 / codec.scale + 1e-12,
+            )
+
+
+def test_flat_reveal_point_subsets(rng_key):
+    """Reveal from a non-contiguous subset of center slices (t-of-w)."""
+    agg = SecureAggregator(
+        scheme=ShamirScheme(threshold=2, num_shares=5, backend="pallas")
+    )
+    tree = {"g": jnp.asarray([1.0, -2.0, 3.5])}
+    prot = agg.protect(rng_key, tree)
+    sub = jax.tree_util.tree_map(
+        lambda s: s[jnp.asarray([1, 4])], prot
+    )  # centers 2 and 5
+    out = agg.reveal(sub, points=[2, 5])
+    np.testing.assert_allclose(
+        np.asarray(out["g"]), [1.0, -2.0, 3.5], atol=2**-20
+    )
+
+
+def test_flat_reveal_below_threshold_rejected(rng_key):
+    agg = SecureAggregator(
+        scheme=ShamirScheme(threshold=3, num_shares=5, backend="pallas")
+    )
+    prot = agg.protect(rng_key, {"g": jnp.asarray([42.0])})
+    sub = jax.tree_util.tree_map(lambda s: s[:2], prot)
+    with pytest.raises(ValueError, match="irrecoverable"):
+        agg.reveal(sub, points=[1, 2])
+
+
+def test_duplicate_reconstruction_points_rejected(rng_key):
+    """Duplicate center ids must error loudly, not reconstruct garbage."""
+    from repro.kernels.shamir_reconstruct import lagrange_weights_host
+
+    with pytest.raises(ValueError, match="distinct"):
+        lagrange_weights_host((1, 1), FIELD31.moduli)
+    sch = ShamirScheme(threshold=2, num_shares=3, backend="pallas")
+    secret = lift_signed(jnp.asarray([5], dtype=jnp.int64), sch.field)
+    shares = sch.share(rng_key, secret)
+    with pytest.raises(ValueError, match="distinct"):
+        sch.reconstruct(shares[:2], points=[2, 2])
+
+
+def test_backend_override_rebuilds_scheme():
+    agg = SecureAggregator(backend="pallas")
+    assert agg.scheme.backend == "pallas"
+    assert SecureAggregator().backend == "reference"
+    with pytest.raises(ValueError, match="backend"):
+        ShamirScheme(backend="cuda")
+
+
+# ------------------------------------------------- fused encode+share kernel
+@pytest.mark.parametrize("field", FIELDS, ids=lambda f: f.name)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_fused_encode_share_matches_codec_plus_oracle(field, dtype, rng_key):
+    """encode+share fusion == FixedPointCodec.encode then share kernel."""
+    from repro.kernels import ref
+
+    codec = FixedPointCodec(field=field)
+    rows, t, w = 8, 2, 3
+    x = jnp.clip(
+        jax.random.normal(rng_key, (rows, 128), jnp.float64), -3, 3
+    ).astype(dtype)
+    coeffs = random_elements(
+        jax.random.fold_in(rng_key, 1), (t - 1, rows, 128), field
+    ).astype(jnp.uint32)
+    shares = ops.shamir_protect_flat(
+        x, coeffs, w, field.moduli, codec.frac_bits
+    )
+    assert shares.shape == (w, field.num_residues, rows, 128)
+    enc = codec.encode(x)  # (R, rows, 128) uint64
+    for r, p in enumerate(field.moduli):
+        want = ref.shamir_shares(
+            enc[r].reshape(-1),
+            coeffs[r].reshape(t - 1, -1).astype(jnp.uint64), w, p,
+        )
+        got = shares[:, r].reshape(w, -1).astype(jnp.uint64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
