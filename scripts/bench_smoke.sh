@@ -3,9 +3,14 @@
 #
 # Runs tier-1 tests, then a small-size secure_overhead smoke with BOTH
 # backends and asserts (a) revealed-sum exactness on every row and (b) the
-# fused Pallas pipeline is not slower than the reference oracle.  Run this
-# before merging anything that touches src/repro/core or
-# src/repro/kernels/shamir_*.
+# fused Pallas pipeline is not slower than the reference oracle.  Then
+# runs the e2e fused-Newton smoke (--quick) and asserts secure ==
+# centralized beta (R^2 = 1) and fused == pre-fusion-loop beta within
+# fixed-point quantization.  Run this before merging anything that
+# touches src/repro/core or src/repro/kernels.
+#
+# BENCH_FULL=1 additionally refreshes BENCH_e2e_secure_fit.json at the
+# full acceptance config (S=8, d=128, N=2e5; several minutes).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -41,3 +46,46 @@ if failures:
     sys.exit(1)
 print("bench smoke OK")
 EOF
+
+echo "== e2e secure fit smoke (fused vs pre-fusion loop) =="
+python benchmarks/e2e_secure_fit.py --quick \
+    --json BENCH_e2e_secure_fit_smoke.json >/dev/null
+
+python - <<'EOF'
+import json, sys
+
+rows = json.load(open("BENCH_e2e_secure_fit_smoke.json"))
+failures = []
+for r in rows:
+    if "path" in r:
+        if not (r["converged"] and r["r2_vs_centralized"] > 0.999999):
+            failures.append(f"secure vs centralized disagree: {r}")
+    if r.get("check", "").startswith("fused speedup"):
+        print(f"{r['check']}: {r['speedup']:.2f}x "
+              f"(beta err {r['max_abs_err_vs_baseline']:.3g})")
+        if not r["beta_identical_within_quantization"]:
+            failures.append(f"fused beta outside quantization: {r}")
+        # the loop_pallas row is informational; only gate the headline
+        # baseline on speed (quick scale still has ample margin)
+        if r["check"].endswith("pre_pr_loop") and r["speedup"] < 1.0:
+            failures.append(f"fused slower than pre-fusion loop: {r}")
+if failures:
+    print("\n".join("FAIL: " + f for f in failures))
+    sys.exit(1)
+print("e2e smoke OK")
+EOF
+
+if [[ "${BENCH_FULL:-0}" == "1" ]]; then
+    echo "== e2e secure fit FULL (refreshes BENCH_e2e_secure_fit.json) =="
+    python benchmarks/e2e_secure_fit.py >/dev/null
+    python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_e2e_secure_fit.json"))
+bad = [r for r in rows if r.get("check") == "fused speedup vs pre_pr_loop"
+       and not r["pass"]]
+if bad:
+    print(f"FAIL: full e2e gate: {bad}")
+    sys.exit(1)
+print("full e2e gate OK")
+EOF
+fi

@@ -1,7 +1,12 @@
 """Paper core: secure, distributed L2-regularized logistic regression."""
+from .batched_summaries import (
+    PackedPartitions,
+    batched_local_summaries,
+    pack_partitions,
+)
 from .field import FIELD31, FIELD_WIDE, FieldSpec
 from .fixed_point import FixedPointCodec
-from .flatbuf import FlatLayout, pack_pytree, unpack_pytree
+from .flatbuf import FlatLayout, pack_pytree, pack_pytree_batched, unpack_pytree
 from .shamir import ShamirScheme
 from .secure_agg import (
     FlatProtected,
@@ -16,7 +21,9 @@ from .protocol import ComputationCenter, Institution, RoundReport, StudyCoordina
 
 __all__ = [
     "FIELD31", "FIELD_WIDE", "FieldSpec", "FixedPointCodec", "ShamirScheme",
-    "FlatLayout", "FlatProtected", "pack_pytree", "unpack_pytree",
+    "FlatLayout", "FlatProtected", "pack_pytree", "pack_pytree_batched",
+    "unpack_pytree",
+    "PackedPartitions", "batched_local_summaries", "pack_partitions",
     "SecureAggregator", "secure_add", "secure_psum", "secure_scale_by_public",
     "LocalSummaries", "local_summaries", "predict_proba", "deviance",
     "FitResult", "centralized_fit", "newton_step", "secure_fit",

@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["FlatLayout", "pack_pytree", "unpack_pytree"]
+__all__ = ["FlatLayout", "pack_pytree", "pack_pytree_batched",
+           "unpack_pytree"]
 
 LANES = 128
 ROW_ALIGN = 8  # float32 / uint32 sublane tile
@@ -81,6 +82,39 @@ def pack_pytree(
     rows = _rows_for(flat.size, row_align)
     buf = jnp.pad(flat, (0, rows * LANES - flat.size)).reshape(rows, LANES)
     return buf, FlatLayout(treedef, shapes, dtypes, rows)
+
+
+def pack_pytree_batched(
+    tree, dtype=None, row_align: int = ROW_ALIGN
+) -> tuple[jnp.ndarray, FlatLayout]:
+    """Pack a pytree of S-leading arrays into one (S, rows, 128) buffer.
+
+    Every leaf carries the same leading batch axis (one slot per
+    institution); the returned ``FlatLayout`` describes a SINGLE slice —
+    leaf shapes without the batch axis — so after reducing the S axis the
+    aggregate unpacks with plain ``unpack_pytree``.  All S slices are
+    raveled/padded with one concatenate instead of S ``pack_pytree`` calls,
+    which is what keeps the batched protect path a single dispatch chain.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("cannot pack an empty pytree")
+    leaves = [jnp.asarray(l) for l in leaves]
+    batch = leaves[0].shape[0]
+    if any(l.shape[:1] != (batch,) for l in leaves):
+        raise ValueError("all leaves need the same leading batch axis")
+    shapes = tuple(tuple(l.shape[1:]) for l in leaves)
+    dtypes = tuple(str(l.dtype) for l in leaves)
+    if dtype is None:
+        dtype = jnp.result_type(*[l.dtype for l in leaves])
+    flat = jnp.concatenate(
+        [l.reshape(batch, -1).astype(dtype) for l in leaves], axis=1
+    )  # (S, num_elements)
+    rows = _rows_for(flat.shape[1], row_align)
+    buf = jnp.pad(flat, ((0, 0), (0, rows * LANES - flat.shape[1])))
+    return buf.reshape(batch, rows, LANES), FlatLayout(
+        treedef, shapes, dtypes, rows
+    )
 
 
 def unpack_pytree(buf: jnp.ndarray, layout: FlatLayout, dtype=None):

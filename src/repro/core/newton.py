@@ -8,10 +8,24 @@ runs the paper's Algorithm 1: per-institution summaries -> Shamir protection
 convergence check.  Both converge to the same beta (R^2 = 1.00, Fig. 2);
 tests assert this to ~1e-6 which is far below the fixed-point quantization
 we configure.
+
+Two execution shapes for the secure loop:
+
+* **fused** (default on the pallas backend) — the whole iteration is one
+  jitted graph: a single batched fused-IRLS launch over all S (ragged)
+  institutions, one batched protect launch over the S flat buffers, one
+  exact uint64 reduction for Algorithm 2, one reveal, and the Newton/prox
+  update — the only host sync per iteration is the scalar deviance read
+  for the convergence test.
+* **loop** (reference backend, or ``fused=False``) — the paper-shaped
+  Python loop over institutions, one protect per institution.  Kept as
+  the correctness comparator and as the pre-fusion baseline that
+  ``benchmarks/e2e_secure_fit.py`` measures against.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Sequence
 
@@ -19,8 +33,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .batched_summaries import (
+    PackedPartitions,
+    batched_local_summaries,
+    pack_partitions,
+)
+from .flatbuf import LANES, ROW_ALIGN, _rows_for
 from .logreg import LocalSummaries, local_summaries, deviance
-from .secure_agg import SecureAggregator
+from .secure_agg import FlatProtected, SecureAggregator
 
 __all__ = ["FitResult", "newton_step", "prox_newton_step",
            "centralized_fit", "secure_fit"]
@@ -48,16 +68,18 @@ def newton_step(
 ) -> jnp.ndarray:
     """Eq. 3: beta + (X^T W X + lam I)^{-1} (g - lam beta).
 
-    Solved via Cholesky (the regularized Hessian is SPD); this is the
-    "securely derive beta_new" step (Algorithm 1, line 15) which operates on
-    *revealed global aggregates* plus public lambda/beta.
+    This is the "securely derive beta_new" step (Algorithm 1, line 15)
+    which operates on *revealed global aggregates* plus public
+    lambda/beta.  The regularized Hessian is SPD, but at protocol-scale d
+    the dense solve is sub-millisecond either way and the plain solve
+    lowers to one LAPACK call — the Cholesky/cho_solve pair costs several
+    custom-call round trips per iteration for no measurable accuracy or
+    speed gain at d <= 512.
     """
     d = beta.shape[0]
     A = hessian + lam * jnp.eye(d, dtype=hessian.dtype)
     rhs = gradient - lam * beta
-    L = jnp.linalg.cholesky(A)
-    delta = jax.scipy.linalg.cho_solve((L, True), rhs)
-    return beta + delta
+    return beta + jnp.linalg.solve(A, rhs)
 
 
 def _soft_threshold(x, t):
@@ -142,6 +164,143 @@ def centralized_fit(
     return FitResult(np.asarray(beta), it, converged, trace)
 
 
+def _protected_tree(protect: str, hessian, gradient, dev):
+    """The leaves Algorithm 1 secret-shares under a given protect mode."""
+    tree = {}
+    if protect in ("gradient", "both"):
+        tree["gradient"] = gradient
+    if protect in ("hessian", "both"):
+        tree["hessian"] = hessian
+    if protect != "none":
+        tree["deviance"] = dev
+    return tree
+
+
+def _iteration_bytes(d: int, num_parts: int, protect: str,
+                     agg: SecureAggregator) -> int:
+    """Per-iteration wire bytes from static shapes/dtypes alone.
+
+    Every iteration moves the same messages (the summary shapes never
+    change), so telemetry needs no per-leaf walk inside the loop: shares
+    travel as w x R slices of the flat uint32 tile buffer (pallas) or
+    uint64 leaf tensors (reference); unprotected leaves go plain in f64.
+    """
+    n_protected = 0
+    if protect in ("gradient", "both"):
+        n_protected += d
+    if protect in ("hessian", "both"):
+        n_protected += d * d
+    if protect != "none":
+        n_protected += 1  # deviance
+    scheme = agg.scheme
+    w, num_r = scheme.num_shares, scheme.field.num_residues
+    share_bytes = 0
+    if n_protected:
+        if agg.backend == "pallas":
+            rows = _rows_for(n_protected, ROW_ALIGN)
+            share_bytes = w * num_r * rows * LANES * 4  # uint32 wire format
+        else:
+            share_bytes = w * num_r * n_protected * 8  # uint64 leaves
+    n_plain = 0
+    if protect in ("none", "hessian"):
+        n_plain += d
+    if protect in ("none", "gradient"):
+        n_plain += d * d
+    if protect == "none":
+        n_plain += 1
+    return num_parts * (share_bytes + n_plain * 8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("agg", "protect", "l1", "interpret")
+)
+def _fused_secure_iteration(beta, key, X, X32, y, counts, lam,
+                            agg: SecureAggregator, protect: str, l1: float,
+                            interpret: bool):
+    """One whole secure Newton iteration as a single jitted graph.
+
+    batched summaries -> batched protect (ONE encode+share launch over the
+    S-leading flat buffers) -> single exact uint64 reduction over the
+    institution axis (Algorithm 2) -> reveal of the *global* aggregate
+    only -> prox/Newton update.  Returns (beta_new, objective); the caller
+    reads only the scalar objective back to the host.
+    """
+    packed = PackedPartitions(X, X32, y, counts)
+    sm = batched_local_summaries(
+        beta, packed, backend="pallas", interpret=interpret
+    )
+    hessian, gradient, dev = sm.hessian, sm.gradient, sm.deviance
+    revealed = {}
+    tree = _protected_tree(protect, hessian, gradient, dev)
+    if tree:
+        prot = agg.protect_batched(key, tree)
+        aggd = agg.aggregate_batched(prot)
+        t = agg.scheme.threshold
+        revealed = agg.reveal(FlatProtected(aggd.buf[:t], aggd.layout))
+    global_h = revealed["hessian"] if protect in ("hessian", "both") \
+        else jnp.sum(hessian, axis=0)
+    global_g = revealed["gradient"] if protect in ("gradient", "both") \
+        else jnp.sum(gradient, axis=0)
+    global_dev = revealed["deviance"] if protect != "none" \
+        else jnp.sum(dev)
+    obj = global_dev + lam * jnp.sum(beta**2) \
+        + 2.0 * l1 * jnp.sum(jnp.abs(beta))
+    beta_new = prox_newton_step(
+        beta, jnp.asarray(global_h, jnp.float64),
+        jnp.asarray(global_g, jnp.float64), lam, l1,
+    )
+    return beta_new, obj
+
+
+def _secure_fit_fused(parts, lam, tol, max_iter, protect, agg, seed, l1):
+    """Fused driver: pack once, then one dispatch + one sync per iteration.
+
+    X keeps the float64 payload: at protocol scale the f32-storage
+    variant (``pack_partitions(..., dtype=jnp.float32)``, the TPU
+    layout) lands right AT the fixed-point quantization boundary against
+    the f64 loop path (measured ~1.1x the (S+1)/scale tolerance at
+    S=8, N=2e5), while costing the same wall-clock here — the f64 gemvs
+    are bandwidth-bound either way.  On real TPU hardware f32 storage is
+    the only option and the relaxed parity contract applies.
+    """
+    packed = pack_partitions(parts)
+    key = jax.random.PRNGKey(seed)
+    beta = jnp.zeros((packed.dim,), dtype=jnp.float64)
+    per_iter_bytes = _iteration_bytes(
+        packed.dim, packed.num_institutions, protect, agg
+    )
+    quant_floor = (len(parts) + 1) * 0.5 / agg.codec.scale
+    dev_prev = np.inf
+    trace: list[float] = []
+    converged = False
+    nbytes = 0
+    it = 0
+    t_total = time.perf_counter()
+    for it in range(1, max_iter + 1):
+        key, sub = jax.random.split(key)
+        beta_new, obj = _fused_secure_iteration(
+            beta, sub, packed.X, packed.X32, packed.y, packed.counts,
+            lam, agg, protect, float(l1), agg.scheme.interpret,
+        )
+        obj = float(obj)  # the one host sync per iteration
+        trace.append(obj)
+        nbytes += per_iter_bytes
+        if abs(dev_prev - obj) < max(tol * (1.0 + abs(obj)), quant_floor):
+            converged = True
+            break
+        dev_prev = obj
+        beta = beta_new
+    total_s = time.perf_counter() - t_total
+    # central_seconds is not separable here: institution and center phases
+    # live in one fused graph (the split remains observable on the loop
+    # path and in protocol.StudyCoordinator).
+    return FitResult(
+        np.asarray(beta), it, converged, trace,
+        central_seconds=0.0, total_seconds=total_s,
+        bytes_transmitted=nbytes,
+    )
+
+
 def secure_fit(
     parts: Sequence[tuple[jnp.ndarray, jnp.ndarray]],
     lam: float = 1.0,
@@ -151,6 +310,7 @@ def secure_fit(
     aggregator: SecureAggregator | None = None,
     seed: int = 0,
     l1: float = 0.0,
+    fused: bool | None = None,
 ) -> FitResult:
     """Paper Algorithm 1 over S institutions' (X_j, y_j) partitions.
 
@@ -158,10 +318,28 @@ def secure_fit(
     need both H and g, so protecting either blocks them; "both" is the fully
     encrypted setting; "none" degrades to DataSHIELD-style plain exchange
     (the insecure baseline the paper improves on, kept for benchmarking).
+
+    ``fused=None`` auto-selects: the pallas backend runs the jit-resident
+    batched iteration (one kernel launch per phase, one host sync per
+    iteration); the reference backend runs the per-institution Python loop
+    (the oracle).  Pass ``fused=False`` to force the loop path on any
+    backend — that is the pre-fusion baseline the e2e benchmark times.
     """
     if protect not in PROTECT_CHOICES:
         raise ValueError(f"protect must be one of {PROTECT_CHOICES}")
     agg = aggregator or SecureAggregator()
+    if fused is None:
+        fused = agg.backend == "pallas"
+    if fused:
+        if agg.backend != "pallas":
+            raise ValueError(
+                "fused secure_fit requires the pallas backend (the flat "
+                "share buffers ARE its wire format); use fused=False with "
+                "backend='reference'"
+            )
+        return _secure_fit_fused(
+            parts, lam, tol, max_iter, protect, agg, seed, l1
+        )
     key = jax.random.PRNGKey(seed)
     d = parts[0][0].shape[1]
     beta = jnp.zeros((d,), dtype=jnp.float64)
@@ -169,6 +347,9 @@ def secure_fit(
     trace: list[float] = []
     converged = False
     central_s = 0.0
+    # telemetry from static shapes (shapes repeat every iteration; no
+    # per-leaf walk inside the loop)
+    per_iter_bytes = _iteration_bytes(d, len(parts), protect, agg)
     nbytes = 0
     t_total = time.perf_counter()
     it = 0
@@ -179,13 +360,8 @@ def secure_fit(
         ]
         protected, plain = [], []
         for s in locals_:
-            tree = {}
-            if protect in ("gradient", "both"):
-                tree["gradient"] = s.gradient
-            if protect in ("hessian", "both"):
-                tree["hessian"] = s.hessian
-            if protect != "none":
-                tree["deviance"] = s.deviance
+            tree = _protected_tree(protect, s.hessian, s.gradient,
+                                   s.deviance)
             key, sub = jax.random.split(key)
             protected.append(agg.protect(sub, tree) if tree else {})
             plain.append(
@@ -195,11 +371,7 @@ def secure_fit(
                     if k not in tree and k != "count"
                 }
             )
-            # telemetry: every share element is a uint64 per residue
-            for leaf in jax.tree_util.tree_leaves(protected[-1]):
-                nbytes += leaf.size * 8
-            for leaf in jax.tree_util.tree_leaves(plain[-1]):
-                nbytes += leaf.size * leaf.dtype.itemsize
+        nbytes += per_iter_bytes
 
         # ---- centralized phase (Computation Centers, steps 11-16)
         t0 = time.perf_counter()

@@ -82,19 +82,16 @@ class ComputationCenter:
     def aggregate_local(self, field):
         """Algorithm 2 run at this center: share-wise sum of its slices.
 
-        Stacks the stash and reduces in one fused pass per leaf (exact
-        uint64 sum + single mod) instead of pairwise adds per submission.
+        Streams a running uint64 accumulator over the stash (exact sum +
+        single mod, fused by XLA) — no (S, ...) stack of submissions is
+        allocated, so a center's memory high-water mark is one slice
+        regardless of cohort size.
         """
-        from .secure_agg import _fsum_batched
+        from .secure_agg import _fold_sum_streaming
 
         if len(self._stash) == 1:
             return self._stash[0]
-        stacked = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs, axis=0), *self._stash
-        )
-        acc = jax.tree_util.tree_map(
-            lambda s: _fsum_batched(s, field, residue_axis=0), stacked
-        )
+        acc = _fold_sum_streaming(tuple(self._stash), field, residue_axis=0)
         self._stash = [acc]
         return acc
 

@@ -31,8 +31,8 @@ regardless of leaf count:
 * ``protect``  — fused fixed-point encode + Horner share evaluation
   (`kernels.shamir_poly.shamir_encode_share_pallas`); the intermediate
   uint64 encoded tensor never materializes.  Returns a `FlatProtected`.
-* ``aggregate`` — one stacked uint64 reduction over the institution axis
-  (`field.fsum`), S-way in a single dispatch.
+* ``aggregate`` — a streaming uint64 accumulator over the S submissions
+  (exact sum, one trailing mod): no (S, ...) stack is ever allocated.
 * ``reveal``   — fused Lagrange reconstruction + CRT Garner digit
   (`kernels.shamir_reconstruct`), then unpack back to the original pytree.
 
@@ -60,7 +60,13 @@ from .field import (
     random_elements_fast,
 )
 from .fixed_point import FixedPointCodec
-from .flatbuf import FlatLayout, LANES, pack_pytree, unpack_pytree
+from .flatbuf import (
+    FlatLayout,
+    LANES,
+    pack_pytree,
+    pack_pytree_batched,
+    unpack_pytree,
+)
 from .shamir import ShamirScheme
 
 __all__ = [
@@ -121,6 +127,34 @@ class FlatProtected:
 def _fsum_batched(stacked, field: FieldSpec, residue_axis: int):
     """Jitted S-way field reduction (cast + sum + mod fused by XLA)."""
     return fsum(stacked, field, axis=0, residue_axis=residue_axis)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("field", "residue_axis")
+)
+def _fold_sum_streaming(submissions, field: FieldSpec, residue_axis: int):
+    """Share-wise sum of S submissions WITHOUT materializing an S-stack.
+
+    A running uint64 accumulator folds the submissions one by one (exact:
+    S reduced elements sum below 2**64 for any S < 2**33) with a single
+    mod at the end.  XLA fuses the unrolled chain into one elementwise
+    loop over donation-sized buffers, so peak memory is one accumulator —
+    not the (S, ...) stack the eager ``jnp.stack`` reduction allocated,
+    which at 1e6+ params made ``aggregate`` allocation-bound.
+    """
+    acc = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.uint64), submissions[0]
+    )
+    for nxt in submissions[1:]:
+        acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.uint64), acc, nxt
+        )
+
+    def _reduce(a, orig):
+        p = field._bcast(a, residue_axis)
+        return (a % p).astype(orig.dtype)
+
+    return jax.tree_util.tree_map(_reduce, acc, submissions[0])
 
 
 @functools.partial(
@@ -194,27 +228,56 @@ class SecureAggregator:
         encoded = jax.tree_util.tree_map(self.codec.encode, tree)
         return self.scheme.share_pytree(key, encoded)
 
+    def protect_batched(self, key: jax.Array, tree):
+        """Protect S institutions' summaries in ONE kernel launch.
+
+        ``tree`` leaves carry a leading S (institution) axis; the S flat
+        slices are packed side by side and pushed through a single
+        encode+share launch.  Returns a ``FlatProtected`` whose buffer is
+        (w, R, S, rows, 128) — feed it to ``aggregate_batched`` to reduce
+        the S axis (the layout describes one slice, i.e. the aggregate).
+        Pallas backend only: the batched layout IS the flat wire format.
+        """
+        if self.backend != "pallas":
+            raise ValueError("protect_batched requires the pallas backend")
+        buf, layout = pack_pytree_batched(tree)
+        s_dim, rows = buf.shape[0], layout.rows
+        shares = _protect_flat(
+            key, buf.reshape(s_dim * rows, LANES), self.scheme,
+            self.codec.frac_bits, s_dim * rows,
+        )  # (w, R, S*rows, 128)
+        w, num_r = shares.shape[0], shares.shape[1]
+        return FlatProtected(
+            shares.reshape(w, num_r, s_dim, rows, LANES), layout
+        )
+
     # computation-center side -------------------------------------------------
     def aggregate(self, protected: Sequence):
         """Share-wise sum over institutions (still protected).
 
-        Stacks the S submissions and reduces in one fused pass per leaf
-        (a single pass total for the flat pallas representation) instead of
-        S-1 pairwise adds.
+        Streams a running uint64 accumulator over the S submissions (one
+        fused elementwise chain, single mod) instead of stacking them: at
+        1e6+ params the old eager ``jnp.stack`` made this phase
+        allocation-bound on the (S, w, R, ...) stack.
         """
         if not protected:
             raise ValueError("nothing to aggregate")
         if len(protected) == 1:
             return protected[0]
         field = self.scheme.field
-        stacked = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs, axis=0), *protected
-        )
-        # leaves are (S, w, R, ...) protect outputs: after reducing S the
-        # residue axis sits at position 1 (same contract as secure_add)
-        return jax.tree_util.tree_map(
-            lambda s: _fsum_batched(s, field, residue_axis=1), stacked
-        )
+        # leaves are (w, R, ...) protect outputs: residue axis 1 (same
+        # contract as secure_add)
+        return _fold_sum_streaming(tuple(protected), field, residue_axis=1)
+
+    def aggregate_batched(self, protected: FlatProtected) -> FlatProtected:
+        """Reduce the institution axis of a ``protect_batched`` output.
+
+        One exact uint64 reduction over axis 2 of the (w, R, S, rows, 128)
+        share buffer — Algorithm 2 for all S submissions in a single
+        dispatch, with no per-submission stacking step.
+        """
+        buf = fsum(protected.buf, self.scheme.field, axis=2, residue_axis=1)
+        return FlatProtected(buf, protected.layout)
 
     def reveal(self, protected, points=None, dtype=jnp.float64):
         """Joint reconstruction of the (aggregate) secret -> floats.

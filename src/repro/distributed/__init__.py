@@ -1,3 +1,5 @@
+from .compat import make_mesh, shard_map
 from .sharding import MeshRules, param_pspec, param_shardings
 
-__all__ = ["MeshRules", "param_pspec", "param_shardings"]
+__all__ = ["MeshRules", "make_mesh", "param_pspec", "param_shardings",
+           "shard_map"]

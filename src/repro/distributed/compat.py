@@ -1,0 +1,52 @@
+"""jax API compatibility shims (0.4.x <-> 0.6+ drift).
+
+The codebase targets the modern spellings (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``); this module makes
+them work on the pinned jax 0.4.37, where ``shard_map`` still lives in
+``jax.experimental.shard_map`` (with the ``check_rep`` spelling of the
+replication check) and meshes carry no axis types.  Every call site routes
+through here instead of feature-testing jax inline.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh"]
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+if _NEW_SHARD_MAP is None:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _EXP_SHARD_MAP
+else:
+    _EXP_SHARD_MAP = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` under both the 0.4.x and 0.6+ APIs.
+
+    ``check_vma`` maps onto the 0.4.x ``check_rep`` flag (same semantics:
+    verify per-output replication/varying-mesh-axes claims).
+    """
+    if _NEW_SHARD_MAP is not None:
+        return _NEW_SHARD_MAP(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    return _EXP_SHARD_MAP(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported.
+
+    Newer jax lets collectives distinguish Auto vs Explicit axes; 0.4.x
+    meshes are implicitly all-Auto, so dropping the argument is exact.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(axis_type.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -1,0 +1,228 @@
+"""Pallas TPU kernel: the paper's full per-institution IRLS local phase,
+batched over institutions, in ONE streaming pass over X.
+
+Per Newton iteration every institution j computes (Algorithm 1, steps 4-6)
+
+    z = X_j beta,  p = sigmoid(z),  w = p (1 - p)
+    H_j = X_j^T diag(w) X_j          (Eq. 4, O(N d^2) — the hot term)
+    g_j = X_j^T (y_j - p)            (Eq. 5)
+    dev_j = -2 sum(y z - softplus z) (Eq. 6)
+
+The pre-fusion pipeline ran three separate passes (z/g/dev kernel, then a
+weighted-Gram kernel re-reading X with w round-tripped through HBM) and a
+Python loop over institutions.  Here one kernel with grid (S, N/block_n)
+streams each institution's (block_n, d) tile through VMEM exactly once and
+emits all three summaries for all S institutions; the IRLS weights live
+only in VMEM registers between the sigmoid and the Gram update — they are
+never written to HBM.
+
+Ragged institutions are padded to a common N_max and masked inside the
+kernel with per-institution row counts, so one launch covers uneven
+partition sizes (the paper's horizontal split is never exactly even).
+
+Precision contract: the Gram/Hessian accumulates in float32 on the MXU
+(`mxu_ref` is a separate operand so a CPU/interpret profile can keep the
+main payload in float64 — on TPU both refs alias one f32 array).  The
+gradient/deviance accumulate in the payload dtype.  H only preconditions
+the Newton step — the fixed point solves g(beta) = lam beta — so f32 H
+changes the trajectory, not the answer; g/dev precision is what bounds the
+final beta and the deviance-based convergence test.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_irls_pallas", "fused_irls_sim", "gram_hessian_pallas"]
+
+DEFAULT_BLOCK_N = 512
+
+
+def _irls_kernel(beta_ref, x_ref, xm_ref, y_ref, cnt_ref,
+                 h_ref, g_ref, dev_ref, *, block_n):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+        dev_ref[...] = jnp.zeros_like(dev_ref)
+
+    x = x_ref[0]  # (block_n, d) payload dtype
+    y = y_ref[0]  # (block_n,)
+    beta = beta_ref[...].astype(x.dtype)  # (d,)
+    # ragged mask: absolute row id vs this institution's true row count
+    row = i * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (block_n, 1), 0
+    )[:, 0]
+    valid = (row < cnt_ref[0]).astype(x.dtype)  # (block_n,)
+
+    z = x @ beta  # (block_n,)
+    p = jax.nn.sigmoid(z)
+    w = (p * (1.0 - p)) * valid  # IRLS weights: VMEM-resident only
+    resid = (y - p) * valid
+    g_ref[0] += x.T @ resid
+    softplus = jnp.logaddexp(jnp.zeros_like(z), z)
+    dev_ref[0] += -2.0 * jnp.sum((y * z - softplus) * valid)
+    # MXU Gram update in f32; weights fold into the left operand
+    xm = xm_ref[0]  # (block_n, d) float32
+    h_ref[0] += jax.lax.dot_general(
+        xm * w.astype(jnp.float32)[:, None], xm,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fused_irls_pallas(
+    beta: jnp.ndarray,  # (d,)
+    X: jnp.ndarray,  # (S, N_max, d) payload dtype (f32 on TPU)
+    Xm: jnp.ndarray,  # (S, N_max, d) float32 MXU operand (== X on TPU)
+    y: jnp.ndarray,  # (S, N_max) payload dtype
+    counts: jnp.ndarray,  # (S,) int32 true row counts (<= N_max)
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+):
+    """All-institution summaries in one launch.
+
+    Returns (H (S, d, d) f32, g (S, d), dev (S,)); g/dev in X.dtype.
+    N_max % block_n == 0 and d % 128 == 0 (ops.py pads); rows >= counts[s]
+    are masked out, so tail padding may hold anything.
+    """
+    s_dim, n, d = X.shape
+    assert n % block_n == 0, "caller pads N_max"
+    grid = (s_dim, n // block_n)
+    kernel = functools.partial(_irls_kernel, block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda s, i: (0,)),
+            pl.BlockSpec((1, block_n, d), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, block_n, d), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, block_n), lambda s, i: (s, i)),
+            pl.BlockSpec((1,), lambda s, i: (s,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, d), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, d), lambda s, i: (s, 0)),
+            pl.BlockSpec((1,), lambda s, i: (s,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_dim, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((s_dim, d), X.dtype),
+            jax.ShapeDtypeStruct((s_dim,), X.dtype),
+        ],
+        interpret=interpret,
+    )(beta, X, Xm, y, counts)
+
+
+@jax.jit
+def fused_irls_sim(beta, X, Xm, y, counts):
+    """Functional simulation of ``fused_irls_pallas`` — same numerics
+    contract (f32 Gram accumulation from the MXU operand, g/dev in the
+    payload dtype, row masks), evaluated as plain XLA ops.
+
+    This is what ``interpret=True`` callers run at production sizes: the
+    Pallas interpreter emulates every grid program with whole-operand
+    copies, which at (S, 2e5, d) costs ~6x the arithmetic itself on CPU.
+    The blocked kernel remains the compiled TPU path; tests pin the two
+    against each other (they differ only in f32 summation order).
+
+    One deliberate upgrade over the TPU kernel: with a float32 payload
+    the kernel accumulates g/dev in f32 (the hardware dtype); the sim
+    always accumulates them in f64 (free on CPU via
+    ``preferred_element_type``), which keeps the secure protocol's
+    fixed-point codec the dominant error term.  The kernel == sim
+    pinning test therefore runs with an f64 payload, where the two
+    contracts coincide.
+
+    Two contraction styles, each where the CPU backend is fastest: the
+    O(N d) z/g/dev reductions run batched (or, for the mixed
+    f32-operand/f64-accumulation case, unrolled — the batched form hits
+    a ~10x-slow generic emitter), while the O(N d^2) Gram unrolls into
+    per-institution 2D contractions mirroring the kernel's (S, blocks)
+    grid; the batched (S, N, d) dot emitter is ~40% slower with much
+    higher variance.  The 3-operand einsum folds the IRLS row scaling
+    into the Gram contraction instead of materializing a scaled copy of
+    Xm.
+    """
+    s_dim, n = X.shape[0], X.shape[1]
+    mask = (
+        jnp.arange(n, dtype=jnp.int32)[None, :] < counts[:, None]
+    ).astype(jnp.float64)
+    if X.dtype == jnp.float32:
+        z = jax.lax.dot_general(
+            X, beta.astype(jnp.float32), (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float64,
+        )
+    else:
+        z = jnp.einsum("snd,d->sn", X, beta.astype(X.dtype))
+    p = jax.nn.sigmoid(z)
+    w32 = ((p * (1.0 - p)) * mask).astype(jnp.float32)
+    H = jnp.stack([
+        jnp.einsum(
+            "n,ni,nj->ij", w32[j], Xm[j], Xm[j],
+            preferred_element_type=jnp.float32,
+        )
+        for j in range(s_dim)
+    ])
+    resid = (y - p) * mask
+    if X.dtype == jnp.float32:
+        r32 = resid.astype(jnp.float32)
+        g = jnp.stack([
+            jax.lax.dot_general(
+                r32[j], X[j], (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float64,
+            )
+            for j in range(s_dim)
+        ])
+    else:
+        g = jnp.einsum("snd,sn->sd", X, resid)
+    dev = -2.0 * jnp.sum((y * z - jnp.logaddexp(0.0, z)) * mask, axis=1)
+    return H, g, dev
+
+
+# -- explicit-weight Gram (legacy public op) ---------------------------------
+def _gram_kernel(x_ref, w_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (block_n, d)
+    xw = x * w_ref[...].astype(jnp.float32)[:, None]
+    o_ref[...] += jax.lax.dot_general(
+        xw, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gram_hessian_pallas(
+    X: jnp.ndarray, w: jnp.ndarray, block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """X^T diag(w) X for caller-supplied weights (X: (N, d), N % block_n
+    == 0, d % 128 == 0 — ops.py pads).  The secure-fit hot path derives w
+    from beta inside ``fused_irls_pallas`` instead; this variant stays for
+    workloads that reweight rows externally (e.g. offset/exposure models).
+    """
+    n, d = X.shape
+    assert n % block_n == 0, "caller pads N"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=interpret,
+    )(X, w)

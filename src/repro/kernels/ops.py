@@ -13,15 +13,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fused_logistic import fused_logistic_pallas
-from .gram_hessian import gram_hessian_pallas
+from .fused_irls import fused_irls_pallas, fused_irls_sim, gram_hessian_pallas
 from .shamir_poly import shamir_encode_share_pallas, shamir_poly_pallas
 from .shamir_reconstruct import (
     lagrange_weights_host,
     shamir_reconstruct_pallas,
 )
 
-__all__ = ["gram_hessian", "fused_logistic", "shamir_shares",
+__all__ = ["gram_hessian", "fused_irls", "shamir_shares",
            "shamir_reconstruct", "shamir_protect_flat", "shamir_reveal_flat",
            "flash_attention", "flash_attention_bwd"]
 
@@ -47,20 +46,47 @@ def gram_hessian(X, w, block_n: int = 512, interpret: bool = True):
     return H[:d, :d]
 
 
-def fused_logistic(beta, X, y, block_n: int = 512, interpret: bool = True):
-    """(g, dev, irls_w) with padding: padded rows have x = 0, y = 0 ->
-    z = 0, p = .5, g contribution 0, dev contribution 2 log 2 (subtracted)."""
-    n, d = X.shape
+def fused_irls(beta, X, y, counts=None, block_n: int = 512,
+               interpret: bool = True, mxu_operand=None,
+               simulate: bool | None = None):
+    """Batched masked IRLS summaries: (H (S,d,d) f32, g (S,d), dev (S,)).
+
+    X: (S, N_max, d); y: (S, N_max); counts: (S,) true (ragged) row counts,
+    default N_max everywhere.  Pads N_max to a block multiple and d to 128
+    (row masking makes the N padding exact; zero d-columns are benign and
+    sliced off).  ``mxu_operand`` is the pre-cast f32 copy of X fed to the
+    Gram matmul — pass it from a hot loop to cast once instead of per call;
+    on TPU X is already f32 and the two operands are the same array.
+
+    ``simulate`` (default: follows ``interpret``) evaluates the kernel's
+    numerics contract as plain XLA ops instead of through the Pallas
+    interpreter, whose per-program whole-operand copies dominate at
+    production N on CPU.  Pass ``simulate=False`` with ``interpret=True``
+    to force the real kernel through the interpreter (tests do, to pin
+    kernel == simulation); on TPU (``interpret=False``) the compiled
+    kernel always runs.
+    """
+    s_dim, n, d = X.shape
+    if counts is None:
+        counts = jnp.full((s_dim,), n, jnp.int32)
+    if simulate is None:
+        simulate = interpret
+    if simulate and interpret:
+        Xm = X.astype(jnp.float32) if mxu_operand is None else mxu_operand
+        return fused_irls_sim(beta, X, Xm, y, counts.astype(jnp.int32))
     bn = min(block_n, int(np.ceil(n / 8) * 8)) if n < block_n else block_n
-    Xp = _pad_to(_pad_to(X, bn, 0), 128, 1)
-    yp = _pad_to(y, bn, 0)
+    Xp = _pad_to(_pad_to(X, bn, 1), 128, 2)
+    if mxu_operand is None:
+        Xmp = Xp.astype(jnp.float32)
+    else:
+        Xmp = _pad_to(_pad_to(mxu_operand, bn, 1), 128, 2)
+    yp = _pad_to(y, bn, 1)
     betap = _pad_to(beta, 128, 0)
-    n_pad = Xp.shape[0] - n
-    g, dev, w = fused_logistic_pallas(
-        betap, Xp, yp, block_n=bn, interpret=interpret
+    H, g, dev = fused_irls_pallas(
+        betap, Xp, Xmp, yp, counts.astype(jnp.int32),
+        block_n=bn, interpret=interpret,
     )
-    dev = dev - 2.0 * jnp.log(2.0) * n_pad
-    return g[:d], dev, w[:n]
+    return H[:, :d, :d], g[:, :d], dev
 
 
 def shamir_shares(

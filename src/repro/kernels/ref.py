@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gram_hessian", "fused_logistic", "shamir_shares",
+__all__ = ["gram_hessian", "fused_irls", "shamir_shares",
            "flash_attention"]
 
 
@@ -15,18 +15,27 @@ def gram_hessian(X: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
                    preferred_element_type=jnp.float32)
 
 
-def fused_logistic(beta: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray):
-    """One pass over X -> (gradient, deviance, irls_weights).
+def fused_irls(beta: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray,
+               counts: jnp.ndarray | None = None):
+    """Batched masked IRLS summaries oracle: (H (S,d,d), g (S,d), dev (S,)).
 
-    gradient = X^T (y - p); deviance = -2 sum(y z - log(1+e^z));
-    irls_weights = p (1 - p); p = sigmoid(X beta).
+    X: (S, N_max, d); rows >= counts[s] are masked out of every sum.
+    Computed in the input dtype (f64 in tests) — the kernel's f32 Gram
+    accumulation is compared against this at matmul tolerance.
     """
-    Xf = X.astype(jnp.float32)
-    z = Xf @ beta.astype(jnp.float32)
+    s_dim, n, _ = X.shape
+    if counts is None:
+        counts = jnp.full((s_dim,), n, jnp.int32)
+    mask = (jnp.arange(n)[None, :] < counts[:, None]).astype(X.dtype)
+    z = jnp.einsum("snd,d->sn", X, beta.astype(X.dtype))
     p = jax.nn.sigmoid(z)
-    g = Xf.T @ (y.astype(jnp.float32) - p)
-    dev = -2.0 * jnp.sum(y.astype(jnp.float32) * z - jnp.logaddexp(0.0, z))
-    return g, dev, p * (1.0 - p)
+    w = p * (1.0 - p) * mask
+    H = jnp.einsum("sni,snj->sij", X * w[..., None], X)
+    g = jnp.einsum("snd,sn->sd", X, (y - p) * mask)
+    dev = -2.0 * jnp.sum(
+        (y * z - jnp.logaddexp(0.0, z)) * mask, axis=1
+    )
+    return H, g, dev
 
 
 def shamir_shares(secret: jnp.ndarray, coeffs: jnp.ndarray, num_shares: int,

@@ -82,12 +82,12 @@ LM_ARCHS = tuple(a for a in ARCH_IDS if a != "logreg_paper")
 
 
 def make_mesh():
+    from repro.distributed.compat import make_mesh as _make_mesh
+
     if ARGS.mesh_shape:
         dims = tuple(int(x) for x in ARGS.mesh_shape.split(","))
         axes = ("pod", "data", "model")[-len(dims):]
-        return jax.make_mesh(
-            dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims)
-        )
+        return _make_mesh(dims, axes)
     return make_production_mesh(multi_pod=ARGS.multi_pod)
 
 
@@ -262,6 +262,8 @@ def run_cell(arch: str, shape_name: str):
         "code_bytes": int(mem.generated_code_size_in_bytes),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     result["xla_cost_analysis"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -6,7 +6,7 @@ only dryrun.py forces 512 placeholder devices via XLA_FLAGS).
 """
 from __future__ import annotations
 
-import jax
+from ..distributed.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
@@ -20,16 +20,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(axes=("data", "model")):
     """1x1 mesh over the single local device (smoke tests, examples)."""
     shape = (1,) * len(axes)
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes)

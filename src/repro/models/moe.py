@@ -26,7 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from ..distributed.compat import shard_map
 
 __all__ = ["moe_ffn", "router_aux_loss"]
 
@@ -189,6 +189,6 @@ def moe_ffn(x, params, cfg, rules):
     out_specs = (P(dp, None, None), P(), P())
     fn = shard_map(
         inner, mesh=mesh, in_specs=tuple(in_specs), out_specs=out_specs,
-        check_rep=False,
+        check_vma=False,
     )
     return fn(*args)

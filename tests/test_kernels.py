@@ -34,36 +34,79 @@ def test_gram_hessian_block_sweep():
         np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
-# --------------------------------------------------------------- fused_logistic
-@pytest.mark.parametrize("n", [16, 300, 512, 1111])
+# ------------------------------------------------------------------ fused_irls
+@pytest.mark.parametrize("counts", [
+    (512, 512), (300, 512), (3, 1111, 40), (1, 1)
+], ids=lambda c: "x".join(map(str, c)))
 @pytest.mark.parametrize("d", [6, 84, 128])
-def test_fused_logistic_matches_ref(n, d):
-    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + d), 3)
-    X = jax.random.normal(k1, (n, d), dtype=jnp.float32)
-    y = jax.random.bernoulli(k2, 0.4, (n,)).astype(jnp.float32)
-    beta = 0.3 * jax.random.normal(k3, (d,), dtype=jnp.float32)
-    g, dev, w = ops.fused_logistic(beta, X, y)
-    g_r, dev_r, w_r = ref.fused_logistic(beta, X, y)
-    np.testing.assert_allclose(g, g_r, rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(dev, dev_r, rtol=2e-5)
-    np.testing.assert_allclose(w, w_r, rtol=1e-5, atol=1e-6)
+def test_fused_irls_matches_ref_ragged(counts, d):
+    """One launch over ragged institutions == masked batched oracle."""
+    s_dim, n_max = len(counts), max(counts)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n_max + d), 3)
+    X = jax.random.normal(k1, (s_dim, n_max, d), dtype=jnp.float64)
+    y = jax.random.bernoulli(k2, 0.4, (s_dim, n_max)).astype(jnp.float64)
+    beta = 0.3 * jax.random.normal(k3, (d,), dtype=jnp.float64)
+    cnt = jnp.asarray(counts, jnp.int32)
+    H_r, g_r, dev_r = ref.fused_irls(beta, X, y, cnt)
+    for simulate in (False, True):  # real interpreted kernel + XLA sim
+        H, g, dev = ops.fused_irls(beta, X, y, cnt, simulate=simulate)
+        np.testing.assert_allclose(H, H_r, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(g, g_r, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(dev, dev_r, rtol=1e-12)
 
 
-def test_fused_logistic_agrees_with_core_summaries():
-    """Kernel path == the jnp path used by core.logreg (f64 -> f32 tol)."""
+def test_fused_irls_block_sweep_masks_exactly():
+    """Blocked accumulation + masking is invariant to block size, including
+    blocks larger than the smallest institution."""
+    counts = (7, 530, 64)
+    X = jax.random.normal(jax.random.PRNGKey(0), (3, 530, 12), jnp.float64)
+    y = jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, (3, 530)).astype(
+        jnp.float64
+    )
+    beta = 0.1 * jnp.ones((12,), jnp.float64)
+    cnt = jnp.asarray(counts, jnp.int32)
+    _, g_want, dev_want = ref.fused_irls(beta, X, y, cnt)
+    for bn in (8, 64, 512):
+        H, g, dev = ops.fused_irls(beta, X, y, cnt, block_n=bn,
+                                   simulate=False)
+        np.testing.assert_allclose(g, g_want, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(dev, dev_want, rtol=1e-12)
+
+
+def test_fused_irls_kernel_matches_simulation():
+    """The blocked Pallas kernel and its XLA functional simulation obey
+    the same numerics contract: identical g/dev (payload-dtype math) and
+    f32-tolerance-identical Gram."""
+    counts = (100, 512)
+    X = jax.random.normal(jax.random.PRNGKey(2), (2, 512, 84), jnp.float64)
+    y = jax.random.bernoulli(jax.random.PRNGKey(3), 0.3, (2, 512)).astype(
+        jnp.float64
+    )
+    beta = 0.2 * jax.random.normal(jax.random.PRNGKey(4), (84,), jnp.float64)
+    cnt = jnp.asarray(counts, jnp.int32)
+    Hk, gk, devk = ops.fused_irls(beta, X, y, cnt, block_n=128,
+                                  simulate=False)
+    Hs, gs, devs = ops.fused_irls(beta, X, y, cnt, simulate=True)
+    np.testing.assert_allclose(Hk, Hs, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(gk, gs, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(devk, devs, rtol=1e-12)
+
+
+def test_fused_irls_agrees_with_core_summaries():
+    """Kernel path == the jnp path used by core.logreg, per institution."""
     from repro.core.logreg import local_summaries
 
-    X = jax.random.normal(jax.random.PRNGKey(5), (400, 20))
-    y = jax.random.bernoulli(jax.random.PRNGKey(6), 0.5, (400,)).astype(
+    X = jax.random.normal(jax.random.PRNGKey(5), (2, 400, 20))
+    y = jax.random.bernoulli(jax.random.PRNGKey(6), 0.5, (2, 400)).astype(
         jnp.float64
     )
     beta = jnp.zeros((20,), dtype=jnp.float64)
-    s = local_summaries(beta, X, y)
-    g, dev, w = ops.fused_logistic(beta, X, y)
-    np.testing.assert_allclose(g, s.gradient, rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(dev, s.deviance, rtol=1e-5)
-    H = ops.gram_hessian(X, w)
-    np.testing.assert_allclose(H, s.hessian, rtol=1e-4, atol=1e-4)
+    H, g, dev = ops.fused_irls(beta, X, y)
+    for j in range(2):
+        s = local_summaries(beta, X[j], y[j])
+        np.testing.assert_allclose(g[j], s.gradient, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(dev[j], s.deviance, rtol=1e-12)
+        np.testing.assert_allclose(H[j], s.hessian, rtol=1e-4, atol=1e-4)
 
 
 # ----------------------------------------------------------------- shamir_poly

@@ -10,6 +10,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.distributed.compat import shard_map
 from repro.core.secure_agg import secure_psum
 from repro.optim.compression import compressed_psum, init_error_feedback
 
@@ -23,7 +24,7 @@ def test_compressed_psum_error_feedback_converges(rng_key):
     e = init_error_feedback(g)
 
     def step(e):
-        return jax.shard_map(
+        return shard_map(
             lambda ee: compressed_psum(g, "pod", ee),
             mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),
             check_vma=False,
@@ -41,7 +42,7 @@ def test_compressed_psum_quantization_bounded(rng_key):
     mesh = jax.make_mesh((1,), ("pod",))
     g = {"w": jax.random.normal(rng_key, (1024,), jnp.float32)}
     e = init_error_feedback(g)
-    mean, e2 = jax.shard_map(
+    mean, e2 = shard_map(
         lambda ee: compressed_psum(g, "pod", ee),
         mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),
         check_vma=False,
@@ -109,7 +110,7 @@ def test_secure_psum_exact_inside_spmd(rng_key):
     tree = {"g": 0.5 * jax.random.normal(rng_key, (256,), jnp.float32),
             "h": jnp.float32(3.25) * jnp.ones((4, 4), jnp.float32)}
 
-    out = jax.shard_map(
+    out = shard_map(
         lambda: secure_psum(tree, "pod", jax.random.PRNGKey(5)),
         mesh=mesh, in_specs=(), out_specs=P(),
         check_vma=False,
