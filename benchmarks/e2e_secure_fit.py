@@ -43,7 +43,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SecureAggregator, centralized_fit, secure_fit
+from repro.core import (
+    Institution,
+    SecureAggregator,
+    StudyCoordinator,
+    centralized_fit,
+    secure_fit,
+)
 from repro.core.field import fsum
 from repro.core.logreg import local_summaries
 from repro.data import generate_synthetic
@@ -212,6 +218,164 @@ def run(num_institutions: int = 8, dim: int = 128, records: int = 200_000,
     return rows
 
 
+def run_coordinator(num_institutions: int = 8, dim: int = 128,
+                    records: int = 200_000, protect: str = "both",
+                    lam: float = 1.0, repeats: int = 3, seed: int = 0,
+                    full_gate: bool = True):
+    """Coordinator-driver rows: the deployment-shaped StudyCoordinator on
+    the fused cohort round vs its per-institution loop oracle.
+
+    All drivers use the SAME pallas aggregator (the loop already enjoys
+    the PR-1 protocol kernels), so the measured win is exactly what the
+    cohort-level batched step buys.  Both rungs of the fused round's
+    precision ladder are measured:
+
+    * ``coordinator_fused`` — the default f64 ("reference") summaries:
+      per-ROUND beta parity with the loop oracle (checked in lockstep,
+      every round, against quantization tolerance).  Its speedup is the
+      dispatch/protocol fusion win only — the f64 Gram flops are shared
+      with the loop, so the ratio compresses toward 1 as N grows.
+    * ``coordinator_fused_f32`` — ``summaries_backend="pallas"`` (the
+      TPU-dtype Gram, same contract as fused ``secure_fit``): the
+      headline round-time win at production N, with CONVERGED-beta
+      parity (the mid-run Newton transient amplifies the f32 Hessian
+      perturbation past per-round tolerance; the fixed point, set by the
+      f64 gradient, is immune).
+    """
+    parts, (X, y) = _make_parts(
+        jax.random.PRNGKey(seed), records, num_institutions, dim
+    )
+    gold = centralized_fit(X, y, lam=lam)
+    agg = SecureAggregator(backend="pallas")
+    quant_tol = (num_institutions + 1) / agg.codec.scale
+
+    def make(fused, summaries_backend=None):
+        insts = [
+            Institution(f"inst{j}", Xj, yj)
+            for j, (Xj, yj) in enumerate(parts)
+        ]
+        return StudyCoordinator(insts, lam=lam, protect=protect,
+                                aggregator=agg, seed=seed, fused=fused,
+                                summaries_backend=summaries_backend)
+
+    # ---- lockstep per-round parity (also the trace/compile/pack warmup)
+    loop, fus = make(False), make(True)
+    fus32 = make(True, summaries_backend="pallas")
+    max_round_err, max_round_err32 = 0.0, 0.0
+    while not (loop.converged or fus.converged) and loop.iteration < 60:
+        loop.step()
+        fus.step()
+        max_round_err = max(max_round_err, float(
+            np.abs(np.asarray(loop.beta) - np.asarray(fus.beta)).max()
+        ))
+        # per-round comparison is only defined while both trajectories
+        # are still moving: once either side converges its beta freezes
+        # and the difference measures convergence timing, not the Newton
+        # transient (same_iterations in the check row catches divergent
+        # round counts)
+        if not fus32.converged:
+            fus32.step()
+            if not (loop.converged or fus32.converged):
+                max_round_err32 = max(max_round_err32, float(
+                    np.abs(np.asarray(loop.beta)
+                           - np.asarray(fus32.beta)).max()
+                ))
+    parity_ok = (loop.converged == fus.converged
+                 and loop.iteration == fus.iteration
+                 and max_round_err <= quant_tol)
+
+    rows, results = [], {}
+    for name, kw in (("coordinator_loop", dict(fused=False)),
+                     ("coordinator_fused", dict(fused=True)),
+                     ("coordinator_fused_f32",
+                      dict(fused=True, summaries_backend="pallas"))):
+        best, coord = 1e30, None
+        for _ in range(repeats):
+            coord = make(**kw)
+            t0 = time.perf_counter()
+            coord.run()
+            best = min(best, time.perf_counter() - t0)
+        beta = np.asarray(coord.beta)
+        results[name] = (best, coord)
+        r2 = float(np.corrcoef(beta, gold.beta)[0, 1] ** 2)
+        rows.append({
+            "path": name,
+            "institutions": num_institutions,
+            "dim": dim,
+            "records": records,
+            "protect": protect,
+            "seconds": best,
+            "seconds_per_iter": best / coord.iteration,
+            "iterations": coord.iteration,
+            "converged": bool(coord.converged),
+            "bytes_transmitted": int(
+                sum(r.bytes_transmitted for r in coord.reports)
+            ),
+            "max_abs_err_vs_centralized": float(
+                np.abs(beta - gold.beta).max()
+            ),
+            "r2_vs_centralized": r2,
+            "pass": bool(coord.converged) and r2 > 0.999999,
+        })
+
+    loop_s, loop_c = results["coordinator_loop"]
+    round_loop = loop_s / loop_c.iteration
+    fus_s, fus_c = results["coordinator_fused"]
+    round_fus = fus_s / fus_c.iteration
+    rows.append({
+        "check": "coordinator fused parity vs loop",
+        "protect": protect,
+        "seconds_per_round_loop": round_loop,
+        "seconds_per_round_fused": round_fus,
+        "round_speedup": round_loop / max(round_fus, 1e-12),
+        "max_round_beta_err": max_round_err,
+        "quantization_tol": quant_tol,
+        "per_round_parity_within_quantization": parity_ok,
+        # the parity rung's gate: every round within quantization, and
+        # the fused round not meaningfully slower than the loop.  At the
+        # full config both are bound by the same f64 Gram flops, so the
+        # ratio sits at ~1.0 and the quick config (where dispatch
+        # dominates and the fusion win is real, ~1.5x) carries the
+        # strict not-slower assertion; here we only exclude regressions
+        # beyond timer noise.
+        "pass": parity_ok and round_loop / max(round_fus, 1e-12) >= (
+            0.9 if full_gate else 1.0
+        ),
+    })
+    f32_s, f32_c = results["coordinator_fused_f32"]
+    round_f32 = f32_s / f32_c.iteration
+    # converged-beta parity measured between the TIMED runs (both driven
+    # to their own convergence — the lockstep loop exits when the f64
+    # pair converges, which may precede fus32's last round)
+    final_err32 = float(
+        np.abs(np.asarray(loop_c.beta) - np.asarray(f32_c.beta)).max()
+    )
+    rows.append({
+        "check": "coordinator fused speedup vs loop",
+        "protect": protect,
+        "baseline_seconds": loop_s,
+        "fused_seconds": f32_s,
+        "speedup": loop_s / max(f32_s, 1e-12),
+        "seconds_per_round_loop": round_loop,
+        "seconds_per_round_fused": round_f32,
+        "round_speedup": round_loop / max(round_f32, 1e-12),
+        "max_round_beta_err": max_round_err32,
+        "final_beta_err_vs_loop": final_err32,
+        "quantization_tol": quant_tol,
+        "final_beta_within_quantization": final_err32 <= quant_tol,
+        "same_iterations": loop_c.iteration == f32_c.iteration,
+        # the speed rung's gate: >= 2x ROUND time at the full config
+        # (>= 1x under --quick) at converged-beta parity over the same
+        # number of rounds
+        "pass": final_err32 <= quant_tol
+        and loop_c.iteration == f32_c.iteration
+        and (
+            round_loop / max(round_f32, 1e-12) >= (2.0 if full_gate else 1.0)
+        ),
+    })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--institutions", type=int, default=8)
@@ -224,8 +388,14 @@ def main(argv=None):
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--quick", action="store_true",
                     help="small config for the bench_smoke gate "
-                         "(S=4, d=32, N=20000, 1 repeat; the 3x headline "
-                         "gate applies to the full config only)")
+                         "(S=4, d=32, N=20000, 1 repeat; the 3x/2x "
+                         "headline gates apply to the full config only)")
+    ap.add_argument("--driver", default="both",
+                    choices=("both", "secure_fit", "coordinator"),
+                    help="which execution driver(s) to benchmark: the "
+                         "in-process secure_fit paths, the deployment-"
+                         "shaped StudyCoordinator (fused vs loop rounds), "
+                         "or both")
     ap.add_argument("--json", default="BENCH_e2e_secure_fit.json",
                     help="machine-readable output path ('' to skip)")
     args = ap.parse_args(argv)
@@ -235,8 +405,13 @@ def main(argv=None):
               repeats=args.repeats)
     if args.quick:
         kw.update(num_institutions=4, dim=32, records=20_000, repeats=1)
-    rows = run(**kw)
-    rows.append({"config": "quick" if args.quick else "full", **{
+    rows = []
+    if args.driver in ("both", "secure_fit"):
+        rows += run(**kw)
+    if args.driver in ("both", "coordinator"):
+        rows += run_coordinator(full_gate=not args.quick, **kw)
+    rows.append({"config": "quick" if args.quick else "full",
+                 "driver": args.driver, **{
         k: kw[k] for k in ("num_institutions", "dim", "records", "protect")
     }})
 

@@ -3,9 +3,15 @@
 Demonstrates the deployment-shaped protocol (core.protocol): 8 institutions
 and 3 Computation Centers run Algorithm 1 while
   * institution 7 is a straggler (misses the round deadline),
-  * Computation Center 2 goes down mid-study (t-of-w Shamir absorbs it),
-  * a new institution joins between Newton iterations (elastic membership),
-and the study still converges, with a per-round audit trail.
+  * Computation Center 2 goes down mid-study (t-of-w Shamir absorbs it:
+    the fused round reveals from the surviving centers' actual points),
+  * a new institution joins between Newton iterations (elastic membership;
+    the cohort repacks, the LRU pack cache keeps both cohorts resident),
+and the study still converges, with a per-round audit trail.  The whole
+thing runs on the FUSED cohort-level round (``fused=True``): each round is
+one jitted graph — batched summaries, one encode+share launch, one uint64
+reduction, reveal, Newton step — with per-round parity to the
+per-institution loop within fixed-point quantization.
 
   PYTHONPATH=src python examples/fault_tolerant_consortium.py
 """
@@ -18,6 +24,7 @@ import numpy as np
 
 from repro.core.newton import centralized_fit
 from repro.core.protocol import Institution, StudyCoordinator
+from repro.core.secure_agg import SecureAggregator
 from repro.data.synthetic import generate_synthetic
 
 study = generate_synthetic(
@@ -31,7 +38,9 @@ insts = [Institution(f"hospital-{j}", X, y, latency=0.5)
 insts[7].latency = 99.0  # chronic straggler: always misses the deadline
 
 coord = StudyCoordinator(insts, lam=1.0, protect="gradient",
-                         deadline=2.0, min_responders=4)
+                         deadline=2.0, min_responders=4,
+                         aggregator=SecureAggregator(backend="pallas"),
+                         fused=True)
 
 for round_no in range(1, 30):
     if coord.converged:

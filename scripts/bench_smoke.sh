@@ -47,7 +47,7 @@ if failures:
 print("bench smoke OK")
 EOF
 
-echo "== e2e secure fit smoke (fused vs pre-fusion loop) =="
+echo "== e2e secure fit smoke (fused vs pre-fusion loop + coordinator) =="
 python benchmarks/e2e_secure_fit.py --quick \
     --json BENCH_e2e_secure_fit_smoke.json >/dev/null
 
@@ -56,6 +56,7 @@ import json, sys
 
 rows = json.load(open("BENCH_e2e_secure_fit_smoke.json"))
 failures = []
+saw_coord = False
 for r in rows:
     if "path" in r:
         if not (r["converged"] and r["r2_vs_centralized"] > 0.999999):
@@ -69,6 +70,14 @@ for r in rows:
         # baseline on speed (quick scale still has ample margin)
         if r["check"].endswith("pre_pr_loop") and r["speedup"] < 1.0:
             failures.append(f"fused slower than pre-fusion loop: {r}")
+    if r.get("check", "").startswith("coordinator fused"):
+        saw_coord = True
+        print(f"{r['check']}: {r['round_speedup']:.2f}x/round "
+              f"(round beta err {r['max_round_beta_err']:.3g})")
+        if not r["pass"]:
+            failures.append(f"coordinator gate failed: {r}")
+if not saw_coord:
+    failures.append("coordinator gate rows missing from e2e smoke")
 if failures:
     print("\n".join("FAIL: " + f for f in failures))
     sys.exit(1)
@@ -83,6 +92,16 @@ import json, sys
 rows = json.load(open("BENCH_e2e_secure_fit.json"))
 bad = [r for r in rows if r.get("check") == "fused speedup vs pre_pr_loop"
        and not r["pass"]]
+# the coordinator acceptance: per-round parity on the default (f64) rung,
+# >= 2x round time on the f32 rung at converged-beta parity; the rows
+# must be PRESENT (a --driver secure_fit refresh would silently drop
+# them and skip the gate)
+coord = [r for r in rows
+         if str(r.get("check", "")).startswith("coordinator fused")]
+if not coord:
+    print("FAIL: coordinator gate rows missing from BENCH_e2e_secure_fit.json")
+    sys.exit(1)
+bad += [r for r in coord if not r["pass"]]
 if bad:
     print(f"FAIL: full e2e gate: {bad}")
     sys.exit(1)

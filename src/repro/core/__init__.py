@@ -2,6 +2,9 @@
 from .batched_summaries import (
     PackedPartitions,
     batched_local_summaries,
+    pack_cache_clear,
+    pack_cache_evict,
+    pack_cache_len,
     pack_partitions,
 )
 from .field import FIELD31, FIELD_WIDE, FieldSpec
@@ -24,6 +27,7 @@ __all__ = [
     "FlatLayout", "FlatProtected", "pack_pytree", "pack_pytree_batched",
     "unpack_pytree",
     "PackedPartitions", "batched_local_summaries", "pack_partitions",
+    "pack_cache_clear", "pack_cache_evict", "pack_cache_len",
     "SecureAggregator", "secure_add", "secure_psum", "secure_scale_by_public",
     "LocalSummaries", "local_summaries", "predict_proba", "deviance",
     "FitResult", "centralized_fit", "newton_step", "secure_fit",

@@ -40,7 +40,7 @@ from .batched_summaries import (
 )
 from .flatbuf import LANES, ROW_ALIGN, _rows_for
 from .logreg import LocalSummaries, local_summaries, deviance
-from .secure_agg import FlatProtected, SecureAggregator
+from .secure_agg import SecureAggregator
 
 __all__ = ["FitResult", "newton_step", "prox_newton_step",
            "centralized_fit", "secure_fit"]
@@ -177,21 +177,28 @@ def _protected_tree(protect: str, hessian, gradient, dev):
 
 
 def _iteration_bytes(d: int, num_parts: int, protect: str,
-                     agg: SecureAggregator) -> int:
+                     agg: SecureAggregator, include_count: bool = False,
+                     num_live_centers: int | None = None) -> int:
     """Per-iteration wire bytes from static shapes/dtypes alone.
 
     Every iteration moves the same messages (the summary shapes never
     change), so telemetry needs no per-leaf walk inside the loop: shares
     travel as w x R slices of the flat uint32 tile buffer (pallas) or
     uint64 leaf tensors (reference); unprotected leaves go plain in f64.
+
+    ``include_count`` mirrors the coordinator wire protocol's extra
+    ``count`` leaf; ``num_live_centers`` switches from secure_fit's
+    all-w accounting to the coordinator's per-center slicing (each
+    online center receives one 1/w slice of the share buffer).
     """
+    extra = 2 if include_count else 1  # deviance (+ count)
     n_protected = 0
     if protect in ("gradient", "both"):
         n_protected += d
     if protect in ("hessian", "both"):
         n_protected += d * d
     if protect != "none":
-        n_protected += 1  # deviance
+        n_protected += extra
     scheme = agg.scheme
     w, num_r = scheme.num_shares, scheme.field.num_residues
     share_bytes = 0
@@ -201,22 +208,28 @@ def _iteration_bytes(d: int, num_parts: int, protect: str,
             share_bytes = w * num_r * rows * LANES * 4  # uint32 wire format
         else:
             share_bytes = w * num_r * n_protected * 8  # uint64 leaves
+        if num_live_centers is not None:
+            share_bytes = (share_bytes // w) * num_live_centers
     n_plain = 0
     if protect in ("none", "hessian"):
         n_plain += d
     if protect in ("none", "gradient"):
         n_plain += d * d
     if protect == "none":
-        n_plain += 1
+        n_plain += extra
     return num_parts * (share_bytes + n_plain * 8)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("agg", "protect", "l1", "interpret")
+    jax.jit, static_argnames=("agg", "protect", "l1", "interpret", "points",
+                              "include_count", "summaries_backend")
 )
 def _fused_secure_iteration(beta, key, X, X32, y, counts, lam,
                             agg: SecureAggregator, protect: str, l1: float,
-                            interpret: bool):
+                            interpret: bool,
+                            points: tuple[int, ...] | None = None,
+                            include_count: bool = False,
+                            summaries_backend: str = "pallas"):
     """One whole secure Newton iteration as a single jitted graph.
 
     batched summaries -> batched protect (ONE encode+share launch over the
@@ -224,19 +237,27 @@ def _fused_secure_iteration(beta, key, X, X32, y, counts, lam,
     institution axis (Algorithm 2) -> reveal of the *global* aggregate
     only -> prox/Newton update.  Returns (beta_new, objective); the caller
     reads only the scalar objective back to the host.
+
+    ``points``/``include_count``/``summaries_backend`` are the coordinator
+    hooks: the fused ``StudyCoordinator.step`` reveals from its *live*
+    centers' share slices (any >= t of the w points), mirrors the wire
+    protocol's protected ``count`` leaf, and selects the summaries
+    precision — "reference" (f64) for per-round parity with the loop
+    oracle (the mid-run Newton transient amplifies Hessian perturbation
+    ~10-40x, so f32-Gram backends hold only converged-beta parity),
+    "pallas"/"mixed" for f32-Gram speed under that relaxed contract.
     """
     packed = PackedPartitions(X, X32, y, counts)
     sm = batched_local_summaries(
-        beta, packed, backend="pallas", interpret=interpret
+        beta, packed, backend=summaries_backend, interpret=interpret
     )
     hessian, gradient, dev = sm.hessian, sm.gradient, sm.deviance
     revealed = {}
     tree = _protected_tree(protect, hessian, gradient, dev)
+    if tree and include_count:
+        tree["count"] = counts.astype(jnp.float64)
     if tree:
-        prot = agg.protect_batched(key, tree)
-        aggd = agg.aggregate_batched(prot)
-        t = agg.scheme.threshold
-        revealed = agg.reveal(FlatProtected(aggd.buf[:t], aggd.layout))
+        revealed = agg.secure_round_batched(key, tree, points=points)
     global_h = revealed["hessian"] if protect in ("hessian", "both") \
         else jnp.sum(hessian, axis=0)
     global_g = revealed["gradient"] if protect in ("gradient", "both") \

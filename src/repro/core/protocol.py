@@ -19,18 +19,43 @@ messages through a coordinator, with the fault-tolerance features a
 
 Timing is simulated (per-institution latency draws) so straggler logic is
 deterministic and testable without wall-clock sleeps.
+
+Two execution shapes for one round, selected by ``fused=``:
+
+* **loop** (default) — the paper-shaped walk over Institution /
+  ComputationCenter objects: one ``local_summaries`` + one protect
+  dispatch per institution, explicit share slices at each center.  This
+  is the oracle: bit-exact across secure-aggregation backends.
+* **fused** — the cohort-level batched round (pallas backend only): the
+  co-scheduled cohort's partitions pack ONCE (LRU-cached across churn)
+  into the (S, N_max, d) layout, and the whole round — batched f64
+  summaries, one encode+share launch over the S-leading flat buffers,
+  single exact uint64 reduction (Algorithm 2), reveal from the *live*
+  centers' slices, Newton update — runs as the same jitted graph
+  ``secure_fit`` uses (``newton._fused_secure_iteration``).  Per-round
+  betas match the loop oracle within fixed-point quantization; center
+  dropout below threshold raises the identical ``RuntimeError``.
+  ``summaries_backend="pallas"|"mixed"`` trades that per-round parity
+  for f32-Gram speed (converged-beta parity only — the ``secure_fit``
+  contract); see ``StudyCoordinator.__init__``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .batched_summaries import (
+    BACKENDS as SUMMARY_BACKENDS,
+    pack_cache_evict,
+    pack_partitions,
+)
 from .logreg import local_summaries
-from .newton import newton_step
+from .newton import _fused_secure_iteration, _iteration_bytes, newton_step
 from .secure_agg import SecureAggregator
 
 __all__ = ["Institution", "ComputationCenter", "StudyCoordinator", "RoundReport"]
@@ -109,6 +134,29 @@ class RoundReport:
     bytes_transmitted: int
 
 
+# the result is cheap arithmetic; the small bound just avoids pinning
+# every aggregator config a long-lived process ever constructs
+@functools.lru_cache(maxsize=64)
+def _round_bytes(d: int, cohort_size: int, protect: str,
+                 agg: SecureAggregator, num_live_centers: int) -> int:
+    """Per-round wire bytes from static shapes/dtypes alone.
+
+    Every round moves the same messages for a given (cohort size, protect
+    mode, scheme) — the summary shapes never change — so the telemetry
+    needs no per-leaf walk inside the round.  Delegates to the shared
+    ``newton._iteration_bytes`` size model with the coordinator wire
+    protocol's two deltas: the protected tree carries the extra ``count``
+    leaf, and each online center receives a 1/w slice of the share
+    buffer (uint32 flat tiles on pallas, uint64 leaf tensors on
+    reference).  ``tests/test_protocol.py`` pins this formula against a
+    per-leaf walk of the actual messages.
+    """
+    return _iteration_bytes(
+        d, cohort_size, protect, agg, include_count=True,
+        num_live_centers=num_live_centers,
+    )
+
+
 class StudyCoordinator:
     """Drives Algorithm 1 across institutions + centers, fault-tolerantly."""
 
@@ -123,11 +171,39 @@ class StudyCoordinator:
         min_responders: int = 1,
         tol: float = 1e-10,
         seed: int = 0,
+        fused: bool = False,
+        summaries_backend: str | None = None,
     ):
         self.institutions = list(institutions)
         self.lam = lam
         self.protect = protect
         self.agg = aggregator or SecureAggregator()
+        # fused rounds need the pallas flat-buffer wire format; the loop
+        # stays the default because it is the bit-exact backend oracle
+        if fused and self.agg.backend != "pallas":
+            raise ValueError(
+                "fused coordinator rounds require the pallas backend (the "
+                "flat share buffers ARE the batched wire format); use "
+                "fused=False with backend='reference'"
+            )
+        self.fused = fused
+        # Precision ladder for the fused round's batched summaries.
+        # "reference" (default) — f64, per-ROUND beta parity with the loop
+        # oracle at the f64 rounding floor (well inside fixed-point
+        # quantization); the coordinator's contract.  "pallas" / "mixed" —
+        # the f32-Gram kernel layouts (TPU dtype / split-accumulation):
+        # measurably faster at production N, but the mid-run Newton
+        # transient amplifies the f32 Hessian perturbation ~10-40x, so
+        # only the CONVERGED beta (fixed by the f64 gradient, not H) is
+        # guaranteed within quantization — the same relaxed contract the
+        # fused ``secure_fit`` ships with.
+        if summaries_backend is None:
+            summaries_backend = "reference"
+        if summaries_backend not in SUMMARY_BACKENDS:
+            raise ValueError(
+                f"summaries_backend must be one of {SUMMARY_BACKENDS}"
+            )
+        self.summaries_backend = summaries_backend
         w = num_centers or self.agg.scheme.num_shares
         if w != self.agg.scheme.num_shares:
             raise ValueError("num_centers must equal scheme.num_shares")
@@ -168,26 +244,55 @@ class StudyCoordinator:
         return up
 
     def add_institution(self, inst: Institution):
+        # churn invalidation: no later cohort may reuse a padded batch
+        # built around this institution's buffer ids.  Belt-and-braces on
+        # top of the cache's identity keys + evict-on-collect weakrefs —
+        # it trades a repack of the churned cohort (packs without this
+        # institution stay resident) for making stale reuse structurally
+        # impossible even if a caller mutates non-jax buffers in place.
+        pack_cache_evict([(inst.X, inst.y)])
         self.institutions.append(inst)
 
     def remove_institution(self, name: str):
+        gone = [i for i in self.institutions if i.name == name]
         self.institutions = [i for i in self.institutions if i.name != name]
+        pack_cache_evict([(i.X, i.y) for i in gone])
 
     # -- one Newton round ------------------------------------------------------
-    def step(self) -> RoundReport:
+    def step(self, fused: bool | None = None) -> RoundReport:
+        """One secure Newton round.  ``fused=None`` uses the constructor
+        setting; an explicit value overrides it for this round only (the
+        two shapes interleave freely: round state is just beta/rng)."""
+        use_fused = self.fused if fused is None else fused
+        if use_fused and self.agg.backend != "pallas":
+            raise ValueError(
+                "fused coordinator rounds require the pallas backend"
+            )
         self.iteration += 1
         cohort = self.cohort()
         stragglers = [
             i.name for i in self.institutions
             if i.online and i not in cohort
         ]
+        num_live = sum(1 for c in self.centers if c.online)
+        nbytes = _round_bytes(
+            cohort[0].X.shape[1], len(cohort), self.protect, self.agg,
+            num_live,
+        )
+        if use_fused:
+            obj, make_beta_new = self._round_fused(cohort)
+        else:
+            obj, make_beta_new = self._round_loop(cohort)
+        return self._finish_round(
+            obj, make_beta_new, cohort, stragglers, nbytes
+        )
+
+    def _round_loop(self, cohort):
+        """The per-institution oracle walk (paper-shaped deployment)."""
         for c in self.centers:
             c.clear()
-        nbytes = 0
         plains = []
         submissions = []
-        num_live = sum(1 for c in self.centers if c.online)
-        w = self.agg.scheme.num_shares
         for inst in cohort:
             self.key, sub = jax.random.split(self.key)
             shares, plain = inst.compute_and_protect(
@@ -202,16 +307,6 @@ class StudyCoordinator:
                     center.receive(jax.tree_util.tree_map(
                         lambda s, i=w_idx: s[i], shares
                     ))
-                # each online center holds one 1/w slice of the stack
-                share_bytes = sum(
-                    leaf.size * leaf.dtype.itemsize
-                    for leaf in jax.tree_util.tree_leaves(shares)
-                )
-                nbytes += (share_bytes // w) * num_live
-            nbytes += sum(
-                leaf.size * leaf.dtype.itemsize
-                for leaf in jax.tree_util.tree_leaves(plain)
-            )
 
         # centers run Algorithm 2 share-wise — each stacks its S received
         # slices and reduces them in one fused pass (exact in the field,
@@ -233,9 +328,48 @@ class StudyCoordinator:
         merged = {**plain_sum, **revealed}
         H = jnp.asarray(merged["hessian"], jnp.float64)
         g = jnp.asarray(merged["gradient"], jnp.float64)
-        dev = float(merged["deviance"])
+        obj = float(merged["deviance"]) + self.lam * float(
+            jnp.sum(self.beta**2)
+        )
+        return obj, lambda: newton_step(self.beta, H, g, self.lam)
 
-        obj = dev + self.lam * float(jnp.sum(self.beta**2))
+    def _round_fused(self, cohort):
+        """Cohort-level batched round: one jitted graph, one host sync.
+
+        The co-scheduled cohort's partitions pack once into the
+        (S, N_max, d) layout, LRU-cached on the part buffers: repeated
+        rounds and straggler-shrunk cohorts hit the cache; packs
+        containing a churned (added/removed) institution are invalidated
+        by the membership hooks and rebuilt on next use.  The whole
+        round runs as
+        the fused ``secure_fit`` iteration with the coordinator's wire
+        tree (deviance + count + protected summaries) revealed from the
+        LIVE centers' share slices.  A cohort below the center threshold
+        raises the same ``RuntimeError`` as the loop path — never a
+        reduction over a short share axis.  ``summaries_backend`` picks
+        the precision contract (see ``__init__``).
+        """
+        if self.protect != "none":
+            # identical failure semantics to the loop path, checked
+            # BEFORE any computation so a dropped center can't be
+            # silently absorbed by revealing from a default prefix
+            points = tuple(c.index for c in self.live_centers())
+        else:
+            points = None
+        packed = pack_partitions([(i.X, i.y) for i in cohort])
+        self.key, sub = jax.random.split(self.key)
+        beta_new, obj = _fused_secure_iteration(
+            self.beta, sub, packed.X, packed.X32, packed.y, packed.counts,
+            self.lam, self.agg, self.protect, 0.0,
+            self.agg.scheme.interpret, points=points, include_count=True,
+            summaries_backend=self.summaries_backend,
+        )
+        # the one host sync of the round (same role as secure_fit's)
+        return float(obj), lambda: beta_new
+
+    def _finish_round(self, obj, make_beta_new, cohort, stragglers,
+                      nbytes) -> RoundReport:
+        """Convergence bookkeeping shared verbatim by both round shapes."""
         self.trace.append(obj)
         quant_floor = (len(cohort) + 1) * 0.5 / self.agg.codec.scale
         if abs(self._obj_prev - obj) < max(
@@ -244,7 +378,7 @@ class StudyCoordinator:
             self.converged = True
         else:
             self._obj_prev = obj
-            self.beta = newton_step(self.beta, H, g, self.lam)
+            self.beta = make_beta_new()
         report = RoundReport(
             self.iteration,
             [i.name for i in cohort],

@@ -279,6 +279,38 @@ class SecureAggregator:
         buf = fsum(protected.buf, self.scheme.field, axis=2, residue_axis=1)
         return FlatProtected(buf, protected.layout)
 
+    def secure_round_batched(self, key: jax.Array, tree,
+                             points: Sequence[int] | None = None,
+                             dtype=jnp.float64):
+        """One whole Algorithm-1+2 round over S-leading summaries.
+
+        protect_batched (ONE encode+share launch) -> aggregate_batched
+        (single exact uint64 reduction over the institution axis) ->
+        reveal of the *global* aggregate from the ``points`` centers'
+        slices.  ``points`` are the 1-based evaluation points of the
+        centers participating in the reveal (default: the first t); a
+        short list raises the below-threshold error from ``reveal``, so a
+        caller that lost too many centers fails loudly instead of
+        reducing over a short share axis.  Fully traceable — this is the
+        round helper both the fused ``secure_fit`` iteration and the
+        fused ``StudyCoordinator.step`` run inside one jitted graph.
+        """
+        w = self.scheme.num_shares
+        if points is None:
+            points = tuple(range(1, self.scheme.threshold + 1))
+        points = tuple(int(p) for p in points)
+        if any(not (1 <= p <= w) for p in points):
+            raise ValueError(f"points must be in 1..{w}, got {points}")
+        if len(set(points)) != len(points):
+            raise ValueError(f"points must be distinct, got {points}")
+        prot = self.protect_batched(key, tree)
+        aggd = self.aggregate_batched(prot)
+        sel = jnp.asarray([p - 1 for p in points])
+        return self.reveal(
+            FlatProtected(aggd.buf[sel], aggd.layout), points=points,
+            dtype=dtype,
+        )
+
     def reveal(self, protected, points=None, dtype=jnp.float64):
         """Joint reconstruction of the (aggregate) secret -> floats.
 

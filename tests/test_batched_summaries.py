@@ -19,9 +19,13 @@ from repro.core import (
     batched_local_summaries,
     centralized_fit,
     local_summaries,
+    pack_cache_clear,
+    pack_cache_evict,
+    pack_cache_len,
     pack_partitions,
     secure_fit,
 )
+from repro.core import batched_summaries as bs_mod
 from repro.core.field import fsum
 from repro.data import generate_synthetic
 
@@ -78,6 +82,56 @@ def test_pack_partitions_memoized_per_study(study):
     p3 = pack_partitions(fresh)
     assert p3 is not p1
     np.testing.assert_array_equal(np.asarray(p3.X), np.asarray(p1.X))
+
+
+def test_pack_cache_serves_alternating_studies(study):
+    """The LRU holds several studies at once: alternating between two
+    part sets (the single-slot memo's thrash case) hits both ways."""
+    parts_a = _uneven_parts(study)
+    parts_b = [(Xj + 0.0, yj + 0.0) for Xj, yj in parts_a]
+    pa, pb = pack_partitions(parts_a), pack_partitions(parts_b)
+    assert pack_partitions(parts_a) is pa  # not evicted by study b
+    assert pack_partitions(parts_b) is pb
+    assert pack_partitions(parts_a) is pa
+
+
+def test_pack_cache_bounded_lru():
+    pack_cache_clear()
+    keep = []
+    for k in range(bs_mod._PACK_CACHE_SIZE + 3):
+        parts = [(jnp.full((4, 3), float(k)), jnp.ones(4))]
+        keep.append(parts)  # hold buffers so entries die only by LRU
+        pack_partitions(parts)
+    assert pack_cache_len() == bs_mod._PACK_CACHE_SIZE
+    # oldest evicted, newest resident
+    newest = pack_partitions(keep[-1])
+    assert pack_partitions(keep[-1]) is newest
+
+
+def test_pack_cache_entry_dies_with_its_buffers():
+    """Evict-on-collect: when a part buffer is garbage collected the
+    entry goes too, so a recycled id can never alias a stale pack."""
+    import gc
+
+    pack_cache_clear()
+    parts = [(jnp.ones((4, 3)), jnp.ones(4))]
+    pack_partitions(parts)
+    assert pack_cache_len() == 1
+    del parts
+    gc.collect()
+    assert pack_cache_len() == 0
+
+
+def test_pack_cache_evict_on_churn(study):
+    """pack_cache_evict drops every entry containing a churned buffer
+    (the coordinator's add/remove_institution hook)."""
+    pack_cache_clear()
+    parts = _uneven_parts(study)
+    p1 = pack_partitions(parts)
+    assert pack_cache_len() == 1
+    pack_cache_evict([parts[0]])
+    assert pack_cache_len() == 0
+    assert pack_partitions(parts) is not p1  # repacked, not resurrected
 
 
 def test_pack_partitions_validates():

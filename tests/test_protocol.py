@@ -126,6 +126,234 @@ def test_checkpoint_resume_bitexact(backend):
     assert ra.objective == rb.objective
 
 
+# ---------------------------------------------- fused cohort-level rounds
+def make_fused_pair(protect="both", num=4, seed=5, uneven=False):
+    """Loop-oracle and fused coordinators over the SAME institutions."""
+    if uneven:
+        base = generate_synthetic(
+            jax.random.PRNGKey(11), num_institutions=1,
+            records_per_institution=1200, dim=6,
+        )
+        X, y = base.pooled()
+        sizes, parts, off = [7, 293, 500, 400], [], 0
+        for s in sizes:
+            parts.append((X[off:off + s], y[off:off + s]))
+            off += s
+        insts = [Institution(f"inst{j}", *parts[j]) for j in range(num)]
+    else:
+        _, insts = make_insts(num=num)
+    agg = SecureAggregator(backend="pallas")
+
+    def clone(fused):
+        copies = [Institution(i.name, i.X, i.y) for i in insts]
+        return StudyCoordinator(
+            copies, lam=1.0, protect=protect, aggregator=agg, seed=seed,
+            fused=fused,
+        )
+
+    return clone(False), clone(True)
+
+
+@pytest.mark.parametrize("protect", ["none", "gradient", "hessian", "both"])
+def test_fused_round_matches_loop_oracle(protect):
+    """Per-round beta/objective parity within fixed-point quantization,
+    every protect mode, deliberately ragged partitions (one institution
+    smaller than a kernel block)."""
+    loop, fus = make_fused_pair(protect=protect, uneven=True)
+    quant = (len(loop.institutions) + 1) / loop.agg.codec.scale
+    for _ in range(6):
+        if loop.converged or fus.converged:
+            break
+        ra, rb = loop.step(), fus.step()
+        assert abs(ra.objective - rb.objective) <= max(1e-9, quant * 10)
+        err = np.abs(np.asarray(loop.beta) - np.asarray(fus.beta)).max()
+        assert err <= quant
+        # telemetry comes from static shapes and must agree across paths
+        assert ra.bytes_transmitted == rb.bytes_transmitted
+        assert ra.responders == rb.responders
+    assert loop.converged == fus.converged
+
+
+def test_fused_step_churn_between_rounds():
+    """add/remove institution between rounds: the fused path repacks the
+    new cohort (never reuses a stale padded batch) and stays within
+    quantization of the loop oracle through the churn."""
+    study, insts = make_insts(num=4)
+    agg = SecureAggregator(backend="pallas")
+
+    def clone(fused):
+        return StudyCoordinator(
+            [Institution(i.name, i.X, i.y) for i in insts[:3]],
+            protect="gradient", aggregator=agg, seed=9, fused=fused,
+        )
+
+    loop, fus = clone(False), clone(True)
+    quant = 5 / agg.codec.scale
+    la, fa = loop.step(), fus.step()
+    assert la.responders == fa.responders == ["inst0", "inst1", "inst2"]
+    # join: both coordinators see the same 4-strong cohort
+    loop.add_institution(Institution(insts[3].name, insts[3].X, insts[3].y))
+    fus.add_institution(Institution(insts[3].name, insts[3].X, insts[3].y))
+    lb, fb = loop.step(), fus.step()
+    assert "inst3" in fb.responders
+    assert np.abs(np.asarray(loop.beta) - np.asarray(fus.beta)).max() <= quant
+    # leave: cohort shrinks, fused pack must follow
+    loop.remove_institution("inst0")
+    fus.remove_institution("inst0")
+    lc, fc = loop.step(), fus.step()
+    assert "inst0" not in fc.responders
+    assert lc.responders == fc.responders
+    assert lc.bytes_transmitted == fc.bytes_transmitted
+    assert np.abs(np.asarray(loop.beta) - np.asarray(fus.beta)).max() <= quant
+
+
+def test_fused_straggler_fallback_cohort():
+    """A straggler shrinks the co-scheduled cohort; the fused round runs
+    on the responding subset exactly like the loop round."""
+    _, insts = make_insts(latencies=[0.0, 0.0, 0.0, 9.9])
+    fus = StudyCoordinator(
+        [Institution(i.name, i.X, i.y, latency=i.latency) for i in insts],
+        protect="gradient", deadline=1.0, min_responders=2,
+        aggregator=SecureAggregator(backend="pallas"), fused=True,
+    )
+    r1 = fus.step()
+    assert r1.stragglers == ["inst3"]
+    assert r1.responders == ["inst0", "inst1", "inst2"]
+    fus.institutions[3].latency = 0.0
+    r2 = fus.step()
+    assert "inst3" in r2.responders
+
+
+def test_fused_center_dropout_semantics():
+    """Center failures within t-of-w are free in the fused round (reveal
+    uses the live centers' actual points); below threshold the fused
+    round raises the SAME RuntimeError as the loop — it must never
+    reduce over a short share axis."""
+    study, insts = make_insts()
+    agg = SecureAggregator(
+        scheme=ShamirScheme(threshold=2, num_shares=5, backend="pallas")
+    )
+    coord = StudyCoordinator(insts, protect="both", aggregator=agg,
+                             fused=True)
+    coord.centers[0].online = False
+    coord.centers[3].online = False
+    coord.centers[4].online = False  # 2 alive == threshold
+    beta = coord.run()
+    gold = centralized_fit(*study.pooled(), lam=1.0)
+    np.testing.assert_allclose(beta, gold.beta, atol=1e-6)
+    # drop one more mid-run: below threshold
+    coord2 = StudyCoordinator(
+        [Institution(i.name, i.X, i.y) for i in insts], protect="both",
+        aggregator=agg, fused=True,
+    )
+    coord2.step()
+    for c in coord2.centers[:4]:
+        c.online = False  # 1 alive < t=2
+    with pytest.raises(RuntimeError, match="unrecoverable"):
+        coord2.step()
+
+
+def test_fused_state_dict_roundtrip_bitexact():
+    """Checkpoint/restore of the fused coordinator: the restored clone
+    evolves bit-identically (same rng stream, same packed cohort)."""
+    _, insts = make_insts()
+    agg = SecureAggregator(backend="pallas")
+    a = StudyCoordinator(insts, protect="both", seed=5, aggregator=agg,
+                         fused=True)
+    for _ in range(2):
+        a.step()
+    state = a.state_dict()
+    b = StudyCoordinator(
+        [Institution(i.name, i.X, i.y) for i in insts], protect="both",
+        seed=5, aggregator=agg, fused=True,
+    )
+    b.load_state_dict(state)
+    ra, rb = a.step(), b.step()
+    np.testing.assert_array_equal(np.asarray(a.beta), np.asarray(b.beta))
+    assert ra.objective == rb.objective
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("protect", ["none", "gradient", "hessian", "both"])
+def test_round_bytes_matches_actual_messages(backend, protect):
+    """The static telemetry formula equals a per-leaf walk over the real
+    messages a round produces (the measurement the formula replaced) —
+    including the per-center slicing when a center is offline."""
+    _, insts = make_insts(num=3, n=40)
+    agg = SecureAggregator(backend=backend)
+    coord = StudyCoordinator(insts[:3], protect=protect, aggregator=agg)
+    coord.centers[0].online = False  # 2 of 3 online, still >= t
+    rep = coord.step()
+    num_live = sum(1 for c in coord.centers if c.online)
+    w = agg.scheme.num_shares
+    nbytes = 0
+    for inst in coord.institutions:
+        shares, plain = inst.compute_and_protect(
+            coord.beta, protect, agg, jax.random.PRNGKey(0)
+        )
+        if shares:
+            share_bytes = sum(
+                leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree_util.tree_leaves(shares)
+            )
+            nbytes += (share_bytes // w) * num_live
+        nbytes += sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(plain)
+        )
+    assert rep.bytes_transmitted == nbytes
+
+
+@pytest.mark.parametrize("summaries_backend", ["pallas", "mixed"])
+def test_fused_f32_rung_converged_parity(summaries_backend):
+    """The f32-Gram summaries rungs (the TPU layouts) hold the relaxed
+    ``secure_fit`` contract: same round count and CONVERGED beta within
+    quantization of the loop oracle (per-round parity is the f64 default
+    rung's contract — the Newton transient amplifies f32 H error)."""
+    _, insts = make_insts()
+    agg = SecureAggregator(backend="pallas")
+    loop = StudyCoordinator(insts, protect="both", aggregator=agg, seed=3)
+    fus = StudyCoordinator(
+        [Institution(i.name, i.X, i.y) for i in insts], protect="both",
+        aggregator=agg, seed=3, fused=True,
+        summaries_backend=summaries_backend,
+    )
+    beta_l, beta_f = loop.run(), fus.run()
+    quant = (len(insts) + 1) / agg.codec.scale
+    assert fus.converged and loop.converged
+    assert fus.iteration == loop.iteration
+    assert np.abs(beta_l - beta_f).max() <= quant
+
+
+def test_fused_requires_pallas_backend():
+    _, insts = make_insts()
+    with pytest.raises(ValueError, match="pallas"):
+        StudyCoordinator(insts, aggregator=SecureAggregator(), fused=True)
+    coord = StudyCoordinator(insts, aggregator=SecureAggregator())
+    with pytest.raises(ValueError, match="pallas"):
+        coord.step(fused=True)
+    with pytest.raises(ValueError, match="summaries_backend"):
+        StudyCoordinator(insts, aggregator=SecureAggregator(backend="pallas"),
+                         fused=True, summaries_backend="nope")
+
+
+def test_fused_and_loop_rounds_interleave():
+    """step(fused=...) overrides per round; the two shapes share all
+    round state so they can alternate inside one fit."""
+    study, insts = make_insts()
+    coord = StudyCoordinator(
+        insts, protect="both", aggregator=SecureAggregator(backend="pallas"),
+    )
+    for k in range(6):
+        if coord.converged:
+            break
+        coord.step(fused=(k % 2 == 1))
+    gold = centralized_fit(*study.pooled(), lam=1.0)
+    np.testing.assert_allclose(
+        np.asarray(coord.run()), gold.beta, atol=1e-6
+    )
+
+
 def test_backends_agree_bitexact():
     """Reference and Pallas coordinators converge to identical traces: the
     revealed aggregates are exact field sums either way, and the fused
