@@ -1,0 +1,279 @@
+"""Secure λ-path cross-validation: batched scanned sweep vs sequential fits.
+
+The selection subsystem's acceptance benchmark.  A consortium choosing λ
+by K-fold CV over an L-point grid needs L*K regularized fits plus secure
+held-out evaluation.  Pre-subsystem, that is L*K sequential ``secure_fit``
+calls — each repacking/rescanning its train folds, re-dispatching the
+protocol per iteration, converging from zero — plus one secure reveal of
+the per-fold validation metrics per fit.  The subsystem
+(``repro.selection.secure_cv_path``) runs the whole sweep as batched
+multi-round secure graphs: fold masks composed onto the packed row masks
+(one data pass per round, NO per-fold repacks), a leading config axis
+through one protect/aggregate/reveal launch per phase per round,
+``lax.scan``-resident rounds with in-graph rng, and warm starts down the
+descending λ path (which collapse late-path Newton counts to 2-3 rounds).
+
+Three execution shapes, all producing the same CV curve, the same 1-SE λ,
+and per-(λ, fold) converged betas equal within fixed-point quantization:
+
+* ``sequential_loop``  — the pre-subsystem baseline and the *oracle*:
+  per-(λ, fold) ``secure_fit(fused=False)`` loop fits (per-institution
+  dispatches over the PR-1 protocol kernels) + a secure validation-metric
+  round per fit + a full-data refit at the picked λ.  The headline >= 3x
+  gate is against this row.
+* ``sequential_fused`` — the same L*K schedule on the fused jit-resident
+  ``secure_fit`` (informational: isolates what the *sweep-level* batching
+  and warm starts buy beyond single-fit fusion).
+* ``batched``          — the subsystem sweep.
+
+Interpret-mode caveat: as in ``e2e_secure_fit.py``, the protocol kernels
+run through the Pallas interpreter and the CV summaries run as the XLA
+functional simulation of ``fused_irls_cv_pallas`` (identical numerics
+contract).  The CV curve is measured on the ``summaries_backend="pallas"``
+rung — converged-beta parity within quantization (the ladder's f32-Gram
+contract; see benchmarks/README.md).  Machine-readable rows land in
+BENCH_lambda_path.json (``--quick`` is the bench_smoke gate size).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SecureAggregator, secure_fit
+from repro.core.logreg import deviance as dev_fn
+from repro.selection import assign_folds, one_se_rule, secure_cv_path
+
+try:  # same data shapes as the e2e benchmark: one ragged-ramp helper
+    from .e2e_secure_fit import _make_parts as _e2e_make_parts
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from e2e_secure_fit import _make_parts as _e2e_make_parts
+
+
+def _make_parts(key, total: int, s: int, d: int):
+    parts, _pooled = _e2e_make_parts(key, total, s, d)
+    return parts
+
+
+def _lambda_grid(num: int) -> list[float]:
+    """Descending log-spaced grid (glmnet direction)."""
+    return list(np.logspace(1.5, -1.5, num))
+
+
+def _secure_val_metrics(agg, key, beta, val_parts):
+    """Secure reveal of cohort-aggregate held-out metrics at ``beta``.
+
+    What a pre-subsystem consortium would bolt onto each fold fit: every
+    institution protects its (val deviance, correct count, row count),
+    shares aggregate, only the sums are revealed.
+    """
+    protected = []
+    for j, (Xv, yv) in enumerate(val_parts):
+        z = Xv @ beta
+        tree = {
+            "val_deviance": dev_fn(jnp.asarray(beta), Xv, yv),
+            "val_correct": jnp.sum(
+                jnp.where((z > 0.0) == (yv > 0.5), 1.0, 0.0)
+            ),
+            "val_count": jnp.asarray(float(Xv.shape[0])),
+        }
+        protected.append(agg.protect(jax.random.fold_in(key, j), tree))
+    return agg.reveal(agg.aggregate(protected))
+
+
+def _sequential_cv(parts, folds, lambdas, num_folds, protect, agg, lam_l1,
+                   fused, tol=1e-10):
+    """L*K sequential secure_fit calls + secure held-out rounds + refit.
+
+    Fold-major order so each fold's train pack stays LRU-resident across
+    the inner λ loop (the kindest schedule for the baseline).
+    """
+    L, K = len(lambdas), num_folds
+    d = parts[0][0].shape[1]
+    betas = np.zeros((L, K, d))
+    vdev = np.zeros((L, K))
+    vcorr = np.zeros((L, K))
+    vcnt = np.zeros((L, K))
+    iters = np.zeros((L, K), np.int32)
+    key = jax.random.PRNGKey(123)
+    for k in range(K):
+        train_parts = [
+            (X[f != k], y[f != k]) for (X, y), f in zip(parts, folds)
+        ]
+        val_parts = [
+            (X[f == k], y[f == k]) for (X, y), f in zip(parts, folds)
+        ]
+        for li, lam in enumerate(lambdas):
+            res = secure_fit(train_parts, lam=lam, l1=lam_l1, tol=tol,
+                             protect=protect, aggregator=agg, fused=fused)
+            betas[li, k] = res.beta
+            iters[li, k] = res.iterations
+            key, sub = jax.random.split(key)
+            m = _secure_val_metrics(agg, sub, res.beta, val_parts)
+            vdev[li, k] = float(m["val_deviance"])
+            vcorr[li, k] = float(m["val_correct"])
+            vcnt[li, k] = float(m["val_count"])
+    per_rec = vdev / np.maximum(vcnt, 1.0)
+    cv_mean = per_rec.mean(axis=1)
+    cv_se = per_rec.std(axis=1, ddof=1) / np.sqrt(K)
+    _, pick = one_se_rule(np.asarray(lambdas), cv_mean, cv_se)
+    refit = secure_fit(parts, lam=lambdas[pick], l1=lam_l1, tol=tol,
+                       protect=protect, aggregator=agg, fused=fused)
+    return {
+        "fold_betas": betas, "iters": iters, "cv_mean": cv_mean,
+        "cv_se": cv_se, "pick": pick, "beta": np.asarray(refit.beta),
+        "total_fit_iters": int(iters.sum()) + refit.iterations,
+    }
+
+
+def run(num_institutions: int = 8, dim: int = 128, records: int = 200_000,
+        num_lambdas: int = 8, num_folds: int = 5, protect: str = "both",
+        l1: float = 0.0, seed: int = 0, full_gate: bool = True):
+    parts = _make_parts(
+        jax.random.PRNGKey(seed), records, num_institutions, dim
+    )
+    lambdas = _lambda_grid(num_lambdas)
+    agg = SecureAggregator(backend="pallas")
+    quant_tol = (num_institutions + 1) / agg.codec.scale
+    folds = [
+        np.asarray(assign_folds(X.shape[0], num_folds, j, 0))
+        for j, (X, _) in enumerate(parts)
+    ]
+    common = dict(num_institutions=num_institutions, dim=dim,
+                  records=records, num_lambdas=num_lambdas,
+                  num_folds=num_folds, protect=protect)
+
+    # ---- batched scanned sweep (warmup: 1-λ path covers both jit traces)
+    secure_cv_path(parts, lambdas[:1], num_folds=num_folds, l1=l1,
+                   protect=protect, aggregator=agg, seed=seed)
+    t0 = time.perf_counter()
+    rep = secure_cv_path(parts, lambdas, num_folds=num_folds, l1=l1,
+                         protect=protect, aggregator=agg, seed=seed)
+    batched_s = time.perf_counter() - t0
+
+    rows, results = [], {}
+    rows.append({
+        "path": "batched", **common,
+        "seconds": batched_s,
+        "secure_rounds": rep.rounds_total,
+        "bytes_per_round": rep.bytes_per_round,
+        "bytes_total": rep.bytes_total,
+        "lambda_1se": rep.lambda_1se,
+        "lambda_best": rep.lambda_best,
+        "all_converged": bool(rep.fold_converged.all()),
+        "summaries_backend": rep.summaries_backend,
+        "pass": bool(rep.fold_converged.all()),
+    })
+
+    # ---- sequential baselines
+    for name, fused in (("sequential_loop", False),
+                        ("sequential_fused", True)):
+        # warm every fold's traces outside the timed region, for BOTH
+        # baselines: the fused path compiles one iteration graph per
+        # fold pack shape, the loop path one local_summaries per
+        # institution-fold shape (plus the shared protect/reveal and
+        # val-metric graphs) — the timed region must measure the
+        # steady-state schedule, not first-call jit
+        for k in range(num_folds):
+            train_k = [(X[f != k], y[f != k])
+                       for (X, y), f in zip(parts, folds)]
+            res = secure_fit(train_k, lam=lambdas[0], l1=l1,
+                             protect=protect, aggregator=agg,
+                             fused=fused, max_iter=2)
+            _secure_val_metrics(
+                agg, jax.random.PRNGKey(0), jnp.asarray(res.beta),
+                [(X[f == k], y[f == k])
+                 for (X, y), f in zip(parts, folds)],
+            )
+        t0 = time.perf_counter()
+        seq = _sequential_cv(parts, folds, lambdas, num_folds, protect,
+                             agg, l1, fused)
+        secs = time.perf_counter() - t0
+        results[name] = (secs, seq)
+        rows.append({
+            "path": name, **common,
+            "seconds": secs,
+            "fit_iterations_total": seq["total_fit_iters"],
+            "lambda_1se": lambdas[seq["pick"]],
+            "pass": True,
+        })
+
+    # ---- the acceptance check row: >= 3x over the sequential loop oracle
+    # at the same selected λ and fold betas within quantization
+    for base, gate in (("sequential_loop", 3.0 if full_gate else 1.0),
+                       ("sequential_fused", None)):
+        base_s, seq = results[base]
+        beta_err = float(np.abs(rep.fold_betas - seq["fold_betas"]).max())
+        refit_err = float(np.abs(rep.beta - seq["beta"]).max())
+        row = {
+            "check": f"batched sweep vs {base}",
+            "protect": protect,
+            "baseline_seconds": base_s,
+            "batched_seconds": batched_s,
+            "speedup": base_s / max(batched_s, 1e-12),
+            "same_lambda_1se": bool(
+                rep.lambda_1se == lambdas[seq["pick"]]
+            ),
+            "max_fold_beta_err": beta_err,
+            "refit_beta_err": refit_err,
+            "quantization_tol": quant_tol,
+            "betas_within_quantization": bool(
+                beta_err <= quant_tol and refit_err <= quant_tol
+            ),
+        }
+        if gate is not None:
+            row["pass"] = bool(
+                row["speedup"] >= gate
+                and row["same_lambda_1se"]
+                and row["betas_within_quantization"]
+            )
+        rows.append(row)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--institutions", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--records", type=int, default=200_000,
+                    help="total N across all institutions")
+    ap.add_argument("--lambdas", type=int, default=8,
+                    help="λ-grid length L (log-spaced, descending)")
+    ap.add_argument("--folds", type=int, default=5)
+    ap.add_argument("--protect", default="both",
+                    choices=("none", "gradient", "hessian", "both"))
+    ap.add_argument("--l1", type=float, default=0.0)
+    ap.add_argument("--quick", action="store_true",
+                    help="small config for the bench_smoke gate (S=4, "
+                         "d=32, N=2e4, L=4, K=3; the 3x headline gate "
+                         "applies to the full config only)")
+    ap.add_argument("--json", default="BENCH_lambda_path.json",
+                    help="machine-readable output path ('' to skip)")
+    args = ap.parse_args(argv)
+
+    kw = dict(num_institutions=args.institutions, dim=args.dim,
+              records=args.records, num_lambdas=args.lambdas,
+              num_folds=args.folds, protect=args.protect, l1=args.l1)
+    if args.quick:
+        kw.update(num_institutions=4, dim=32, records=20_000,
+                  num_lambdas=4, num_folds=3)
+    rows = run(full_gate=not args.quick, **kw)
+    rows.append({"config": "quick" if args.quick else "full", **{
+        k: kw[k] for k in ("num_institutions", "dim", "records",
+                           "num_lambdas", "num_folds", "protect")
+    }})
+
+    out = json.dumps(rows, indent=2)
+    print(out)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(out + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

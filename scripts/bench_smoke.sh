@@ -84,6 +84,33 @@ if failures:
 print("e2e smoke OK")
 EOF
 
+echo "== lambda-path selection smoke (batched sweep vs sequential oracle) =="
+python benchmarks/lambda_path.py --quick \
+    --json BENCH_lambda_path_smoke.json >/dev/null
+
+python - <<'EOF'
+import json, sys
+
+rows = json.load(open("BENCH_lambda_path_smoke.json"))
+failures = []
+saw_gate = False
+for r in rows:
+    if r.get("path") == "batched" and not r["pass"]:
+        failures.append(f"batched sweep did not converge: {r}")
+    if r.get("check", "").endswith("sequential_loop"):
+        saw_gate = True
+        print(f"{r['check']}: {r['speedup']:.2f}x "
+              f"(fold beta err {r['max_fold_beta_err']:.3g})")
+        if not r["pass"]:
+            failures.append(f"lambda-path gate failed: {r}")
+if not saw_gate:
+    failures.append("lambda-path gate row missing from smoke output")
+if failures:
+    print("\n".join("FAIL: " + f for f in failures))
+    sys.exit(1)
+print("lambda-path smoke OK")
+EOF
+
 if [[ "${BENCH_FULL:-0}" == "1" ]]; then
     echo "== e2e secure fit FULL (refreshes BENCH_e2e_secure_fit.json) =="
     python benchmarks/e2e_secure_fit.py >/dev/null
@@ -106,5 +133,23 @@ if bad:
     print(f"FAIL: full e2e gate: {bad}")
     sys.exit(1)
 print("full e2e gate OK")
+EOF
+    echo "== lambda-path FULL (refreshes BENCH_lambda_path.json) =="
+    python benchmarks/lambda_path.py >/dev/null
+    python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_lambda_path.json"))
+bad = [r for r in rows
+       if str(r.get("check", "")).endswith("sequential_loop")
+       and not r["pass"]]
+gate = [r for r in rows
+        if str(r.get("check", "")).endswith("sequential_loop")]
+if not gate:
+    print("FAIL: lambda-path gate row missing from BENCH_lambda_path.json")
+    sys.exit(1)
+if bad:
+    print(f"FAIL: full lambda-path gate (>= 3x + parity): {bad}")
+    sys.exit(1)
+print(f"full lambda-path gate OK ({gate[0]['speedup']:.2f}x)")
 EOF
 fi

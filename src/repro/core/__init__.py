@@ -1,6 +1,8 @@
 """Paper core: secure, distributed L2-regularized logistic regression."""
 from .batched_summaries import (
+    CVSummaries,
     PackedPartitions,
+    batched_cv_summaries,
     batched_local_summaries,
     pack_cache_clear,
     pack_cache_evict,
@@ -27,6 +29,7 @@ __all__ = [
     "FlatLayout", "FlatProtected", "pack_pytree", "pack_pytree_batched",
     "unpack_pytree",
     "PackedPartitions", "batched_local_summaries", "pack_partitions",
+    "CVSummaries", "batched_cv_summaries",
     "pack_cache_clear", "pack_cache_evict", "pack_cache_len",
     "SecureAggregator", "secure_add", "secure_psum", "secure_scale_by_public",
     "LocalSummaries", "local_summaries", "predict_proba", "deviance",

@@ -33,10 +33,12 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from typing import NamedTuple
 
 from .logreg import LocalSummaries
 
 __all__ = ["PackedPartitions", "pack_partitions", "batched_local_summaries",
+           "CVSummaries", "batched_cv_summaries",
            "pack_cache_clear", "pack_cache_evict", "pack_cache_len"]
 
 BACKENDS = ("reference", "pallas", "mixed")
@@ -262,6 +264,155 @@ def _mixed_summaries(beta, X, X32, y, counts, chunk: int = MIXED_GRAM_CHUNK):
     )
     H = jnp.sum(Hc.astype(jnp.float64), axis=1)
     return H, g, dev
+
+
+# -- cross-validated summaries: fold masks over the SAME packed batch --------
+
+class CVSummaries(NamedTuple):
+    """Per-(config, institution) train summaries + held-out metrics.
+
+    The selection subsystem's batched mirror of ``LocalSummaries``: every
+    field carries leading (C, S) axes — C path configs (lambda x fold
+    pairs, plus optional full-data fits with ``fold == -1``) over S
+    institutions — all emitted by ONE pass over the packed batch.  The
+    validation fields are per-institution secrets exactly like H/g/dev:
+    they only ever leave an institution secret-shared.
+    """
+
+    hessian: jnp.ndarray  # (C, S, d, d) train-fold Gram
+    gradient: jnp.ndarray  # (C, S, d) train-fold score
+    deviance: jnp.ndarray  # (C, S) train-fold -2 log L
+    count: jnp.ndarray  # (C, S) train-fold row count
+    val_deviance: jnp.ndarray  # (C, S) held-out -2 log L
+    val_correct: jnp.ndarray  # (C, S) held-out correct predictions
+    val_count: jnp.ndarray  # (C, S) held-out row count
+
+
+def _cv_masks(X, counts, fold_ids, fold_of):
+    """(tmask, vmask) float64 (C, S, N): fold masks composed onto the
+    ragged row mask.  ``fold_of == -1`` selects no validation rows, so a
+    full-data fit shares the batch with the fold fits."""
+    n = X.shape[1]
+    row_ok = jnp.arange(n, dtype=jnp.int32)[None, :] < counts[:, None]
+    on_fold = fold_ids[None] == fold_of[:, None, None]
+    tmask = (row_ok[None] & ~on_fold).astype(jnp.float64)
+    vmask = (row_ok[None] & on_fold).astype(jnp.float64)
+    return tmask, vmask
+
+
+def _cv_common_terms(betas, X, y, tmask, vmask):
+    """f64 z/g/dev/val terms shared by the reference and mixed rungs (and
+    matching the sim's f64-accumulation contract).  Returns everything
+    except the Gram, which is what the rungs differ on."""
+    s_dim = X.shape[0]
+    z = jnp.einsum("snd,cd->csn", X, betas.astype(X.dtype))
+    z = z.astype(jnp.float64)
+    p = jax.nn.sigmoid(z)
+    ll = y[None] * z - jnp.logaddexp(0.0, z)
+    dev_tr = -2.0 * jnp.sum(ll * tmask, axis=2)
+    dev_va = -2.0 * jnp.sum(ll * vmask, axis=2)
+    acc_va = jnp.sum(
+        jnp.where((z > 0.0) == (y[None] > 0.5), vmask, 0.0), axis=2
+    )
+    w = (p * (1.0 - p)) * tmask  # (C, S, N) train-fold IRLS weights
+    resid = (y[None] - p) * tmask
+    g = jnp.stack([
+        jax.lax.dot_general(
+            resid[:, s], X[s], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float64,
+        )
+        for s in range(s_dim)
+    ], axis=1)  # (C, S, d)
+    return w, g, dev_tr, dev_va, acc_va
+
+
+def batched_cv_summaries(
+    betas: jnp.ndarray,
+    packed: PackedPartitions,
+    fold_ids: jnp.ndarray,
+    fold_of: jnp.ndarray,
+    backend: str = "pallas",
+    interpret: bool = True,
+    block_n: int = 512,
+) -> CVSummaries:
+    """All (config, institution) train summaries + held-out metrics in one
+    launch over the packed batch — no per-fold repacking, ever.
+
+    ``betas`` (C, d) holds one Newton iterate per path config;
+    ``fold_ids`` (S, N_max) the per-row fold assignment (padding rows may
+    hold anything — the row mask already excludes them); ``fold_of`` (C,)
+    names each config's held-out fold (-1: none).  ``backend`` selects
+    the same precision ladder as ``batched_local_summaries``:
+
+    * "reference" — f64 end to end (per-round-parity rung),
+    * "pallas"    — the kernel layout: f32 Gram, f64 g/dev
+      (``interpret=True`` runs the XLA simulation, exactly like the
+      non-CV path),
+    * "mixed"     — f64 g/dev + chunked split-accumulation f32 Gram.
+
+    The Gram on every rung runs as a ``lax.map`` over the config axis so
+    the traced graph size is independent of path length.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}")
+    fold_ids = fold_ids.astype(jnp.int32)
+    fold_of = fold_of.astype(jnp.int32)
+    if backend == "pallas":
+        from ..kernels import ops
+
+        H, g, dev_tr, dev_va, acc_va, n_va = ops.fused_irls_cv(
+            betas, packed.X, packed.y, fold_ids, fold_of,
+            counts=packed.counts, block_n=block_n, interpret=interpret,
+            mxu_operand=packed.X32,
+        )
+        # train + held-out rows partition the valid rows exactly (also
+        # for fold_of == -1, where n_va == 0), so n_tr needs no dense
+        # (C, S, N) mask materialization inside the sweep scan
+        n_va = n_va.astype(jnp.float64)
+        n_tr = packed.counts[None, :].astype(jnp.float64) - n_va
+        return CVSummaries(
+            H.astype(jnp.float64), g.astype(jnp.float64),
+            dev_tr.astype(jnp.float64), n_tr,
+            dev_va.astype(jnp.float64), acc_va.astype(jnp.float64),
+            n_va,
+        )
+    X, y = packed.X, packed.y
+    tmask, vmask = _cv_masks(X, packed.counts, fold_ids, fold_of)
+    w, g, dev_tr, dev_va, acc_va = _cv_common_terms(
+        betas, X, y, tmask, vmask
+    )
+    s_dim, d = X.shape[0], X.shape[2]
+    if backend == "reference":
+        def gram_one(w_c):  # (S, N) f64 -> (S, d, d) f64
+            return jnp.stack([
+                (X[s] * w_c[s][:, None]).T @ X[s] for s in range(s_dim)
+            ])
+
+        H = jax.lax.map(gram_one, w)
+    else:  # mixed: chunked f32 gemms merged in f64, per config
+        X32 = packed.X32
+        n = X.shape[1]
+        chunk = MIXED_GRAM_CHUNK
+        num_chunks = -(-n // chunk)
+        pad = num_chunks * chunk - n
+
+        def slabs(a):
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+            return a.reshape(s_dim, num_chunks, chunk, d)
+
+        X32s = slabs(X32)
+
+        def gram_one(w_c):  # (S, N) -> (S, d, d): split accumulation
+            Xw32 = slabs((X * w_c[..., None]).astype(jnp.float32))
+            Hc = jax.lax.dot_general(
+                Xw32, X32s, (((2,), (2,)), ((0, 1), (0, 1)))
+            )  # (S, nc, d, d) f32 partial Grams
+            return jnp.sum(Hc.astype(jnp.float64), axis=1)
+
+        H = jax.lax.map(gram_one, w)
+    n_tr = jnp.sum(tmask, axis=2)
+    n_va = jnp.sum(vmask, axis=2)
+    return CVSummaries(H, g, dev_tr, n_tr, dev_va, acc_va, n_va)
 
 
 def batched_local_summaries(

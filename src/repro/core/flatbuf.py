@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["FlatLayout", "pack_pytree", "pack_pytree_batched",
-           "unpack_pytree"]
+           "unpack_pytree", "unpack_pytree_batched"]
 
 LANES = 128
 ROW_ALIGN = 8  # float32 / uint32 sublane tile
@@ -115,6 +115,28 @@ def pack_pytree_batched(
     return buf.reshape(batch, rows, LANES), FlatLayout(
         treedef, shapes, dtypes, rows
     )
+
+
+def unpack_pytree_batched(buf: jnp.ndarray, layout: FlatLayout, dtype=None):
+    """Invert ``pack_pytree_batched``: (B, rows, 128) -> pytree of
+    (B, *shape) leaves.
+
+    The batch axis survives as the leading axis of every leaf — this is
+    how the selection sweep unpacks one revealed buffer per config from a
+    single reveal launch over the (C * rows, 128) stack.
+    """
+    batch = buf.shape[0]
+    flat = buf.reshape(batch, -1)
+    leaves, offset = [], 0
+    for shape, ldt in zip(layout.shapes, layout.dtypes):
+        n = int(np.prod(shape, dtype=np.int64))
+        out_dt = dtype if dtype is not None else ldt
+        leaves.append(
+            flat[:, offset:offset + n].reshape((batch,) + shape)
+            .astype(out_dt)
+        )
+        offset += n
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
 
 
 def unpack_pytree(buf: jnp.ndarray, layout: FlatLayout, dtype=None):

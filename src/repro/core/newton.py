@@ -43,9 +43,54 @@ from .logreg import LocalSummaries, local_summaries, deviance
 from .secure_agg import SecureAggregator
 
 __all__ = ["FitResult", "newton_step", "prox_newton_step",
-           "centralized_fit", "secure_fit"]
+           "centralized_fit", "secure_fit", "regularized_objective",
+           "stop_threshold", "should_stop"]
 
 PROTECT_CHOICES = ("none", "gradient", "hessian", "both")
+
+
+# -- the one stopping rule -----------------------------------------------------
+#
+# Every secure driver (secure_fit loop + fused, StudyCoordinator loop +
+# fused rounds, and the selection sweep's in-graph scan) terminates on the
+# SAME deviance test, computed from identically-formed objectives.  Before
+# unification the loop drivers summed ``float(dev) + lam * float(...)`` in
+# host Python while the fused graph summed in one jnp expression — a
+# 1-ulp objective difference that could flip the iteration count when a
+# tolerance landed exactly on a round's deviance delta.  All helpers are
+# jnp-traceable (they vectorize over a config axis inside the selection
+# scan) and exact for host floats.
+
+def regularized_objective(dev, beta, lam, l1=0.0):
+    """The convergence objective at beta: deviance + lam ||b||^2 (+ L1).
+
+    ``beta`` may carry a leading config axis (objective per config); lam
+    broadcasts (per-config lambda on the selection path).  Every driver
+    forms its objective through this one expression so the stopping test
+    below compares bit-identical floats across execution shapes.
+    """
+    beta = jnp.asarray(beta, jnp.float64)
+    return (jnp.asarray(dev, jnp.float64)
+            + lam * jnp.sum(beta**2, axis=-1)
+            + 2.0 * l1 * jnp.sum(jnp.abs(beta), axis=-1))
+
+
+def stop_threshold(obj, tol: float, num_parts: int, scale: float):
+    """max(relative tolerance, fixed-point quantization floor).
+
+    The deviance travels through the fixed-point codec, so no driver may
+    test convergence tighter than the aggregate quantization of S
+    institution deviances plus the revealed sum ((S+1) half-ulps at
+    ``scale`` fractional resolution).
+    """
+    quant_floor = (num_parts + 1) * 0.5 / scale
+    return jnp.maximum(tol * (1.0 + jnp.abs(obj)), quant_floor)
+
+
+def should_stop(obj_prev, obj, tol: float, num_parts: int, scale: float):
+    """True when |obj_prev - obj| clears the shared threshold."""
+    return jnp.abs(obj_prev - obj) < stop_threshold(obj, tol, num_parts,
+                                                    scale)
 
 
 @dataclasses.dataclass
@@ -154,7 +199,7 @@ def centralized_fit(
         s = local_summaries(beta, X, y)
         # regularized objective at the *current* beta (same ordering as the
         # secure protocol, where dev_j arrives with the summaries)
-        obj = float(s.deviance) + lam * float(jnp.sum(beta**2))
+        obj = float(regularized_objective(s.deviance, beta, lam))
         trace.append(obj)
         if abs(dev_prev - obj) < tol * (1.0 + abs(obj)):
             converged = True
@@ -178,7 +223,8 @@ def _protected_tree(protect: str, hessian, gradient, dev):
 
 def _iteration_bytes(d: int, num_parts: int, protect: str,
                      agg: SecureAggregator, include_count: bool = False,
-                     num_live_centers: int | None = None) -> int:
+                     num_live_centers: int | None = None,
+                     num_configs: int = 1, extra_scalars: int = 0) -> int:
     """Per-iteration wire bytes from static shapes/dtypes alone.
 
     Every iteration moves the same messages (the summary shapes never
@@ -190,8 +236,13 @@ def _iteration_bytes(d: int, num_parts: int, protect: str,
     ``count`` leaf; ``num_live_centers`` switches from secure_fit's
     all-w accounting to the coordinator's per-center slicing (each
     online center receives one 1/w slice of the share buffer).
+    ``num_configs`` multiplies the whole message set for the selection
+    sweep's (lambda x fold) config axis — every config ships its own
+    summary tree per round — and ``extra_scalars`` accounts for that
+    path's additional held-out-metric leaves (val deviance / correct /
+    count) riding in each config's protected buffer.
     """
-    extra = 2 if include_count else 1  # deviance (+ count)
+    extra = (2 if include_count else 1) + extra_scalars
     n_protected = 0
     if protect in ("gradient", "both"):
         n_protected += d
@@ -217,7 +268,7 @@ def _iteration_bytes(d: int, num_parts: int, protect: str,
         n_plain += d * d
     if protect == "none":
         n_plain += extra
-    return num_parts * (share_bytes + n_plain * 8)
+    return num_configs * num_parts * (share_bytes + n_plain * 8)
 
 
 @functools.partial(
@@ -264,8 +315,7 @@ def _fused_secure_iteration(beta, key, X, X32, y, counts, lam,
         else jnp.sum(gradient, axis=0)
     global_dev = revealed["deviance"] if protect != "none" \
         else jnp.sum(dev)
-    obj = global_dev + lam * jnp.sum(beta**2) \
-        + 2.0 * l1 * jnp.sum(jnp.abs(beta))
+    obj = regularized_objective(global_dev, beta, lam, l1)
     beta_new = prox_newton_step(
         beta, jnp.asarray(global_h, jnp.float64),
         jnp.asarray(global_g, jnp.float64), lam, l1,
@@ -290,7 +340,6 @@ def _secure_fit_fused(parts, lam, tol, max_iter, protect, agg, seed, l1):
     per_iter_bytes = _iteration_bytes(
         packed.dim, packed.num_institutions, protect, agg
     )
-    quant_floor = (len(parts) + 1) * 0.5 / agg.codec.scale
     dev_prev = np.inf
     trace: list[float] = []
     converged = False
@@ -306,7 +355,8 @@ def _secure_fit_fused(parts, lam, tol, max_iter, protect, agg, seed, l1):
         obj = float(obj)  # the one host sync per iteration
         trace.append(obj)
         nbytes += per_iter_bytes
-        if abs(dev_prev - obj) < max(tol * (1.0 + abs(obj)), quant_floor):
+        if bool(should_stop(dev_prev, obj, tol, len(parts),
+                            agg.codec.scale)):
             converged = True
             break
         dev_prev = obj
@@ -404,14 +454,13 @@ def secure_fit(
         global_h = revealed.get("hessian", summed_plain.get("hessian"))
         global_g = revealed.get("gradient", summed_plain.get("gradient"))
         global_dev = revealed.get("deviance", summed_plain.get("deviance"))
-        # regularized objective at the current beta (summaries' beta)
-        obj = float(global_dev) + lam * float(jnp.sum(beta**2)) \
-            + 2.0 * l1 * float(jnp.sum(jnp.abs(beta)))
+        # regularized objective at the current beta (summaries' beta) —
+        # formed through the same expression as the fused graph so both
+        # drivers compare bit-identical floats at the tolerance boundary
+        obj = float(regularized_objective(global_dev, beta, lam, l1))
         trace.append(obj)
-        # convergence threshold cannot be tighter than the fixed-point
-        # quantization of the protected deviances (S institutions x 0.5 ulp)
-        quant_floor = (len(parts) + 1) * 0.5 / agg.codec.scale
-        if abs(dev_prev - obj) < max(tol * (1.0 + abs(obj)), quant_floor):
+        if bool(should_stop(dev_prev, obj, tol, len(parts),
+                            agg.codec.scale)):
             central_s += time.perf_counter() - t0
             converged = True
             break

@@ -55,7 +55,13 @@ from .batched_summaries import (
     pack_partitions,
 )
 from .logreg import local_summaries
-from .newton import _fused_secure_iteration, _iteration_bytes, newton_step
+from .newton import (
+    _fused_secure_iteration,
+    _iteration_bytes,
+    newton_step,
+    regularized_objective,
+    should_stop,
+)
 from .secure_agg import SecureAggregator
 
 __all__ = ["Institution", "ComputationCenter", "StudyCoordinator", "RoundReport"]
@@ -328,9 +334,11 @@ class StudyCoordinator:
         merged = {**plain_sum, **revealed}
         H = jnp.asarray(merged["hessian"], jnp.float64)
         g = jnp.asarray(merged["gradient"], jnp.float64)
-        obj = float(merged["deviance"]) + self.lam * float(
-            jnp.sum(self.beta**2)
-        )
+        # same objective expression as the fused graph: the loop and fused
+        # drivers must compare bit-identical floats in the stopping rule
+        obj = float(regularized_objective(
+            merged["deviance"], self.beta, self.lam
+        ))
         return obj, lambda: newton_step(self.beta, H, g, self.lam)
 
     def _round_fused(self, cohort):
@@ -371,10 +379,8 @@ class StudyCoordinator:
                       nbytes) -> RoundReport:
         """Convergence bookkeeping shared verbatim by both round shapes."""
         self.trace.append(obj)
-        quant_floor = (len(cohort) + 1) * 0.5 / self.agg.codec.scale
-        if abs(self._obj_prev - obj) < max(
-            self.tol * (1.0 + abs(obj)), quant_floor
-        ):
+        if bool(should_stop(self._obj_prev, obj, self.tol, len(cohort),
+                            self.agg.codec.scale)):
             self.converged = True
         else:
             self._obj_prev = obj

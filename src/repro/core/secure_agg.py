@@ -279,6 +279,18 @@ class SecureAggregator:
         buf = fsum(protected.buf, self.scheme.field, axis=2, residue_axis=1)
         return FlatProtected(buf, protected.layout)
 
+    def _validated_points(self, points) -> tuple[int, ...]:
+        """Normalize + sanity-check reveal points (1-based, distinct)."""
+        w = self.scheme.num_shares
+        if points is None:
+            points = tuple(range(1, self.scheme.threshold + 1))
+        points = tuple(int(p) for p in points)
+        if any(not (1 <= p <= w) for p in points):
+            raise ValueError(f"points must be in 1..{w}, got {points}")
+        if len(set(points)) != len(points):
+            raise ValueError(f"points must be distinct, got {points}")
+        return points
+
     def secure_round_batched(self, key: jax.Array, tree,
                              points: Sequence[int] | None = None,
                              dtype=jnp.float64):
@@ -295,20 +307,73 @@ class SecureAggregator:
         round helper both the fused ``secure_fit`` iteration and the
         fused ``StudyCoordinator.step`` run inside one jitted graph.
         """
-        w = self.scheme.num_shares
-        if points is None:
-            points = tuple(range(1, self.scheme.threshold + 1))
-        points = tuple(int(p) for p in points)
-        if any(not (1 <= p <= w) for p in points):
-            raise ValueError(f"points must be in 1..{w}, got {points}")
-        if len(set(points)) != len(points):
-            raise ValueError(f"points must be distinct, got {points}")
+        points = self._validated_points(points)
         prot = self.protect_batched(key, tree)
         aggd = self.aggregate_batched(prot)
         sel = jnp.asarray([p - 1 for p in points])
         return self.reveal(
             FlatProtected(aggd.buf[sel], aggd.layout), points=points,
             dtype=dtype,
+        )
+
+    def secure_round_multiconfig(self, key: jax.Array, tree,
+                                 points: Sequence[int] | None = None,
+                                 dtype=jnp.float64):
+        """One secure round over a (C, S, ...)-leading summary tree.
+
+        The selection sweep's wire shape: every leaf carries a leading
+        (config, institution) pair of axes — C = (lambda x fold) path
+        points advancing together, S institutions each submitting one
+        summary slice per config.  The whole round is still three
+        launches total, independent of C:
+
+        * ONE encode+share launch over the (C * S) flat slices
+          (``protect_batched`` on the collapsed leading axis),
+        * ONE exact uint64 reduction over the institution axis — the
+          share buffer reshapes to (w, R, C, S, rows, 128) and Algorithm
+          2 runs per config along axis 3,
+        * ONE Lagrange+CRT reveal over the (C * rows, 128) stack of
+          per-config aggregates, unpacked back to (C, ...)-leading
+          leaves.
+
+        Per-institution validation scores therefore never exist in the
+        clear anywhere: held-out metrics enter as shares and only their
+        cross-institution sums are reconstructed, per config.  Fully
+        traceable; this runs inside the selection scan's jitted graph.
+        """
+        points = self._validated_points(points)
+        if len(points) < self.scheme.threshold:
+            raise ValueError(
+                f"need >= t={self.scheme.threshold} shares, got "
+                f"{len(points)} (information-theoretically irrecoverable "
+                "below threshold)"
+            )
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if not leaves:
+            raise ValueError("cannot run a round on an empty pytree")
+        c_dim, s_dim = leaves[0].shape[0], leaves[0].shape[1]
+        if any(l.shape[:2] != (c_dim, s_dim) for l in leaves):
+            raise ValueError(
+                "all leaves need the same leading (config, institution) axes"
+            )
+        flat_tree = jax.tree_util.tree_unflatten(
+            treedef,
+            [l.reshape((c_dim * s_dim,) + l.shape[2:]) for l in leaves],
+        )
+        prot = self.protect_batched(key, flat_tree)
+        w, num_r, _, rows, lanes = prot.buf.shape
+        by_config = prot.buf.reshape(w, num_r, c_dim, s_dim, rows, lanes)
+        # Algorithm 2 per config: exact uint64 reduction over institutions
+        aggd = fsum(by_config, self.scheme.field, axis=3, residue_axis=1)
+        sel = jnp.asarray([p - 1 for p in points])
+        stacked = aggd[sel].reshape(len(points), num_r, c_dim * rows, lanes)
+        flat = _reveal_flat(
+            stacked, self.scheme, self.codec.frac_bits, points
+        )  # (C * rows, 128) float64
+        from .flatbuf import unpack_pytree_batched
+
+        return unpack_pytree_batched(
+            flat.reshape(c_dim, rows, lanes), prot.layout, dtype=dtype
         )
 
     def reveal(self, protected, points=None, dtype=jnp.float64):

@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["fused_irls_pallas", "fused_irls_sim", "gram_hessian_pallas"]
+__all__ = ["fused_irls_pallas", "fused_irls_sim", "fused_irls_cv_pallas",
+           "fused_irls_cv_sim", "gram_hessian_pallas"]
 
 DEFAULT_BLOCK_N = 512
 
@@ -184,6 +185,174 @@ def fused_irls_sim(beta, X, Xm, y, counts):
         g = jnp.einsum("snd,sn->sd", X, resid)
     dev = -2.0 * jnp.sum((y * z - jnp.logaddexp(0.0, z)) * mask, axis=1)
     return H, g, dev
+
+
+# -- cross-validated variant: fold masks composed into the row masks ---------
+#
+# The selection subsystem advances C = (lambda x fold) path points at once.
+# Config c trains on every row whose fold id differs from fold_of[c] and
+# evaluates held-out deviance/accuracy on the rows it excludes — the fold
+# mask composes with the ragged row-count mask INSIDE the kernel, so one
+# streaming pass over the same packed (S, N_max, d) batch emits train-fold
+# summaries AND validation metrics for every (config, institution) pair
+# without ever materializing per-fold repacks of X.  fold_of[c] == -1
+# means "no held-out fold" (a full-data path fit riding in the same batch:
+# fold ids are never negative, so the val mask is empty and the train mask
+# reduces to the plain row mask).
+
+def _irls_cv_kernel(beta_ref, x_ref, xm_ref, y_ref, cnt_ref, fid_ref,
+                    fold_ref, h_ref, g_ref, dtr_ref, dva_ref, acc_ref,
+                    nva_ref, *, block_n):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+        dtr_ref[...] = jnp.zeros_like(dtr_ref)
+        dva_ref[...] = jnp.zeros_like(dva_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        nva_ref[...] = jnp.zeros_like(nva_ref)
+
+    x = x_ref[0]  # (block_n, d) payload dtype
+    y = y_ref[0]  # (block_n,)
+    beta = beta_ref[0].astype(x.dtype)  # (d,) — this config's iterate
+    row = i * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (block_n, 1), 0
+    )[:, 0]
+    valid = row < cnt_ref[0]  # ragged row mask
+    hold = jnp.logical_and(valid, fid_ref[0] == fold_ref[0])
+    tmask = jnp.logical_and(valid, jnp.logical_not(hold)).astype(x.dtype)
+    vmask = hold.astype(x.dtype)
+
+    z = x @ beta
+    p = jax.nn.sigmoid(z)
+    w = (p * (1.0 - p)) * tmask  # train-fold IRLS weights, VMEM-only
+    g_ref[0, 0] += x.T @ ((y - p) * tmask)
+    ll = y * z - jnp.logaddexp(jnp.zeros_like(z), z)
+    dtr_ref[0, 0] += -2.0 * jnp.sum(ll * tmask)
+    dva_ref[0, 0] += -2.0 * jnp.sum(ll * vmask)
+    correct = (z > 0.0) == (y > 0.5)
+    acc_ref[0, 0] += jnp.sum(jnp.where(correct, vmask, 0.0))
+    nva_ref[0, 0] += jnp.sum(vmask)
+    xm = xm_ref[0]  # (block_n, d) float32 MXU operand
+    h_ref[0, 0] += jax.lax.dot_general(
+        xm * w.astype(jnp.float32)[:, None], xm,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fused_irls_cv_pallas(
+    betas: jnp.ndarray,  # (C, d) one iterate per path config
+    X: jnp.ndarray,  # (S, N_max, d) payload dtype (f32 on TPU)
+    Xm: jnp.ndarray,  # (S, N_max, d) float32 MXU operand (== X on TPU)
+    y: jnp.ndarray,  # (S, N_max) payload dtype
+    counts: jnp.ndarray,  # (S,) int32 true row counts (<= N_max)
+    fold_ids: jnp.ndarray,  # (S, N_max) int32 per-row fold assignment
+    fold_of: jnp.ndarray,  # (C,) int32 held-out fold per config (-1: none)
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+):
+    """Every (config, institution) train summary + held-out metric in one
+    launch: H (C, S, d, d) f32, g (C, S, d), dev_train (C, S),
+    dev_val (C, S), correct_val (C, S), count_val (C, S); g and the
+    scalar reductions in X.dtype.  Grid (C, S, N/block_n): X streams
+    through VMEM once per config with the fold mask applied in-register.
+    """
+    c_dim = betas.shape[0]
+    s_dim, n, d = X.shape
+    assert n % block_n == 0, "caller pads N_max"
+    grid = (c_dim, s_dim, n // block_n)
+    kernel = functools.partial(_irls_cv_kernel, block_n=block_n)
+    scalar = lambda: jax.ShapeDtypeStruct((c_dim, s_dim), X.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda c, s, i: (c, 0)),
+            pl.BlockSpec((1, block_n, d), lambda c, s, i: (s, i, 0)),
+            pl.BlockSpec((1, block_n, d), lambda c, s, i: (s, i, 0)),
+            pl.BlockSpec((1, block_n), lambda c, s, i: (s, i)),
+            pl.BlockSpec((1,), lambda c, s, i: (s,)),
+            pl.BlockSpec((1, block_n), lambda c, s, i: (s, i)),
+            pl.BlockSpec((1,), lambda c, s, i: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, d, d), lambda c, s, i: (c, s, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda c, s, i: (c, s, 0)),
+            pl.BlockSpec((1, 1), lambda c, s, i: (c, s)),
+            pl.BlockSpec((1, 1), lambda c, s, i: (c, s)),
+            pl.BlockSpec((1, 1), lambda c, s, i: (c, s)),
+            pl.BlockSpec((1, 1), lambda c, s, i: (c, s)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_dim, s_dim, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((c_dim, s_dim, d), X.dtype),
+            scalar(), scalar(), scalar(), scalar(),
+        ],
+        interpret=interpret,
+    )(betas, X, Xm, y, counts, fold_ids, fold_of)
+
+
+@jax.jit
+def fused_irls_cv_sim(betas, X, Xm, y, counts, fold_ids, fold_of):
+    """Functional simulation of ``fused_irls_cv_pallas`` as plain XLA ops
+    — the CPU/interpret execution shape at production N, mirroring
+    ``fused_irls_sim``'s contracts: f32 Gram accumulation from the MXU
+    operand, f64 gradient/deviance accumulation regardless of payload
+    dtype, fold∘row masks identical to the kernel.
+
+    Contraction styles follow the same CPU-emitter measurements as the
+    non-CV sim: the O(C S N d) z/g reductions run as clean 2D gemms
+    (z batched over configs, g unrolled per institution), while the
+    O(C S N d^2) Gram — the flop wall — runs as a ``lax.map`` over the
+    config axis of per-institution 2D contractions, so the traced graph
+    stays small at any path length while each contraction hits the fast
+    gemm emitter.
+    """
+    s_dim, n = X.shape[0], X.shape[1]
+    row_ok = jnp.arange(n, dtype=jnp.int32)[None, :] < counts[:, None]
+    on_fold = fold_ids[None] == fold_of[:, None, None]  # (C, S, N)
+    hold = row_ok[None] & on_fold
+    tmask = (row_ok[None] & ~on_fold).astype(jnp.float64)
+    vmask = hold.astype(jnp.float64)
+    z = jax.lax.dot_general(
+        X, betas.astype(X.dtype), (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float64,
+    )  # (S, N, C)
+    z = jnp.moveaxis(z, -1, 0)  # (C, S, N)
+    p = jax.nn.sigmoid(z)
+    ll = y[None] * z - jnp.logaddexp(0.0, z)
+    dev_tr = -2.0 * jnp.sum(ll * tmask, axis=2)
+    dev_va = -2.0 * jnp.sum(ll * vmask, axis=2)
+    acc_va = jnp.sum(
+        jnp.where((z > 0.0) == (y[None] > 0.5), vmask, 0.0), axis=2
+    )
+    n_va = jnp.sum(vmask, axis=2)
+    resid = (y[None] - p) * tmask  # (C, S, N) f64
+    g = jnp.stack([
+        jax.lax.dot_general(
+            resid[:, s], X[s], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float64,
+        )
+        for s in range(s_dim)
+    ], axis=1)  # (C, S, d)
+    w32 = ((p * (1.0 - p)) * tmask).astype(jnp.float32)
+
+    def gram_one_config(w_c):  # (S, N) f32 -> (S, d, d) f32
+        return jnp.stack([
+            jax.lax.dot_general(
+                Xm[s] * w_c[s][:, None], Xm[s],
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            for s in range(s_dim)
+        ])
+
+    H = jax.lax.map(gram_one_config, w32)  # (C, S, d, d)
+    return H, g, dev_tr, dev_va, acc_va, n_va
 
 
 # -- explicit-weight Gram (legacy public op) ---------------------------------

@@ -13,14 +13,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fused_irls import fused_irls_pallas, fused_irls_sim, gram_hessian_pallas
+from .fused_irls import (
+    fused_irls_cv_pallas,
+    fused_irls_cv_sim,
+    fused_irls_pallas,
+    fused_irls_sim,
+    gram_hessian_pallas,
+)
 from .shamir_poly import shamir_encode_share_pallas, shamir_poly_pallas
 from .shamir_reconstruct import (
     lagrange_weights_host,
     shamir_reconstruct_pallas,
 )
 
-__all__ = ["gram_hessian", "fused_irls", "shamir_shares",
+__all__ = ["gram_hessian", "fused_irls", "fused_irls_cv", "shamir_shares",
            "shamir_reconstruct", "shamir_protect_flat", "shamir_reveal_flat",
            "flash_attention", "flash_attention_bwd"]
 
@@ -87,6 +93,48 @@ def fused_irls(beta, X, y, counts=None, block_n: int = 512,
         block_n=bn, interpret=interpret,
     )
     return H[:, :d, :d], g[:, :d], dev
+
+
+def fused_irls_cv(betas, X, y, fold_ids, fold_of, counts=None,
+                  block_n: int = 512, interpret: bool = True,
+                  mxu_operand=None, simulate: bool | None = None):
+    """Cross-validated batched IRLS summaries over a (config, institution)
+    grid: (H (C,S,d,d) f32, g (C,S,d), dev_train (C,S), dev_val (C,S),
+    correct_val (C,S), count_val (C,S)).
+
+    ``betas`` is (C, d) — one iterate per (lambda x fold) path config;
+    ``fold_ids`` is (S, N_max) int32 per-row fold assignment and
+    ``fold_of`` (C,) the held-out fold per config (-1 = none, i.e. a
+    full-data fit sharing the launch).  Same padding/``simulate``
+    semantics as ``fused_irls``: rows beyond ``counts`` are masked
+    regardless of their fold id, so N/d padding is exact.
+    """
+    s_dim, n, d = X.shape
+    if counts is None:
+        counts = jnp.full((s_dim,), n, jnp.int32)
+    if simulate is None:
+        simulate = interpret
+    fold_ids = fold_ids.astype(jnp.int32)
+    fold_of = fold_of.astype(jnp.int32)
+    if simulate and interpret:
+        Xm = X.astype(jnp.float32) if mxu_operand is None else mxu_operand
+        return fused_irls_cv_sim(
+            betas, X, Xm, y, counts.astype(jnp.int32), fold_ids, fold_of
+        )
+    bn = min(block_n, int(np.ceil(n / 8) * 8)) if n < block_n else block_n
+    Xp = _pad_to(_pad_to(X, bn, 1), 128, 2)
+    if mxu_operand is None:
+        Xmp = Xp.astype(jnp.float32)
+    else:
+        Xmp = _pad_to(_pad_to(mxu_operand, bn, 1), 128, 2)
+    yp = _pad_to(y, bn, 1)
+    fidp = _pad_to(fold_ids, bn, 1)  # padded rows are row-masked anyway
+    betap = _pad_to(betas, 128, 1)
+    H, g, dtr, dva, acc, nva = fused_irls_cv_pallas(
+        betap, Xp, Xmp, yp, counts.astype(jnp.int32), fidp, fold_of,
+        block_n=bn, interpret=interpret,
+    )
+    return H[:, :, :d, :d], g[:, :, :d], dtr, dva, acc, nva
 
 
 def shamir_shares(

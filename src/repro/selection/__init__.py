@@ -1,0 +1,28 @@
+"""Secure model selection: cross-validated regularization paths.
+
+The paper fits one fixed λ; a real consortium study must *choose* λ — and
+per-fold validation statistics are exactly the per-institution summaries
+the threat model says must never be revealed.  This subsystem runs the
+full (λ-grid x K-fold) sweep through the existing Shamir pipeline as
+batched multi-round secure graphs: fold masks composed onto the packed
+row masks (one data pass per round, no per-fold repacking), a leading
+config axis over protect -> aggregate -> reveal (one launch per protocol
+phase per round regardless of path length), scan-resident Newton rounds
+with in-graph rng, warm starts along the descending λ path, and a
+1-SE-rule pick with a warm-started full-data refit.
+
+Entry points: ``secure_cv_path`` (in-process, fixed partitions) and
+``SelectionCoordinator`` (deployment-shaped: fault tolerance, churn-safe
+folds, mid-path resume).
+"""
+from .coordinator import SelectionCoordinator
+from .folds import assign_folds, pack_fold_ids
+from .path import PathDriver, PathSettings, secure_cv_path
+from .report import PathReport, one_se_rule
+
+__all__ = [
+    "SelectionCoordinator",
+    "assign_folds", "pack_fold_ids",
+    "PathDriver", "PathSettings", "secure_cv_path",
+    "PathReport", "one_se_rule",
+]

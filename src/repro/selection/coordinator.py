@@ -1,0 +1,175 @@
+"""Deployment-shaped driver for the secure model-selection subsystem.
+
+``SelectionCoordinator`` wraps a ``StudyCoordinator`` — reusing its cohort
+formation (stragglers, elastic membership), live-center accounting, churn
+hooks, and checkpoint conventions — and drives the chunked λ-path sweep
+(``PathDriver``) across whatever cohort is present at each chunk boundary:
+
+* **churn-safe folds** — fold membership is a pure function of the
+  institution's *name* (``selection.folds``), so institutions that join,
+  leave, or straggle between chunks never perturb anyone else's fold
+  assignment; a returning institution resumes its exact folds.
+* **mid-path resume** — ``state_dict``/``load_state_dict`` round-trip the
+  whole sweep state (chunk cursor, warm-start betas, accumulated CV
+  aggregates, rng round counter).  The per-round protect randomness is
+  folded in-graph from (seed, round slot), so a resumed sweep replays
+  bit-identically to an uninterrupted one.
+* **secure CV metrics end to end** — per-institution held-out
+  deviance/accuracy travel only as Shamir shares inside the per-round
+  multi-config buffer; the coordinator (and every center) learns the
+  cross-institution sums per (λ, fold) only.
+* **telemetry from static shapes** — bytes/round for the (chunk x
+  cohort) sweep from the same size model as the round protocols; no
+  per-leaf walks.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ..core.protocol import Institution, StudyCoordinator
+from ..core.secure_agg import SecureAggregator
+from .folds import assign_folds
+from .path import PathDriver, PathSettings
+from .report import PathReport
+
+__all__ = ["SelectionCoordinator"]
+
+
+class SelectionCoordinator:
+    """Cross-validated λ selection over a fault-tolerant consortium."""
+
+    def __init__(
+        self,
+        institutions: Sequence[Institution],
+        lambdas: Sequence[float],
+        num_folds: int = 5,
+        l1: float = 0.0,
+        protect: str = "gradient",
+        aggregator: SecureAggregator | None = None,
+        num_centers: int | None = None,
+        deadline: float | None = None,
+        min_responders: int = 1,
+        tol: float = 1e-10,
+        seed: int = 0,
+        fold_seed: int = 0,
+        summaries_backend: str = "pallas",
+        lam_block: int = 1,
+        rounds_per_sync: int = 8,
+        max_rounds: int = 50,
+        warm_start: bool = True,
+        refit: bool = True,
+    ):
+        agg = aggregator or SecureAggregator(backend="pallas")
+        self.settings = PathSettings(
+            lambdas=tuple(sorted((float(l) for l in lambdas),
+                                 reverse=True)),
+            num_folds=num_folds, l1=float(l1), protect=protect, tol=tol,
+            summaries_backend=summaries_backend, lam_block=lam_block,
+            rounds_per_sync=rounds_per_sync, max_rounds=max_rounds,
+            warm_start=warm_start, refit=refit, seed=seed,
+            fold_seed=fold_seed,
+        )
+        # the wrapped deployment shape: cohort/straggler/center/churn
+        # management all comes from the StudyCoordinator (fused rounds
+        # share the pallas aggregator the sweep requires)
+        self.study = StudyCoordinator(
+            institutions, lam=self.settings.lambdas[0], protect=protect,
+            aggregator=agg, num_centers=num_centers, deadline=deadline,
+            min_responders=min_responders, tol=tol, seed=seed, fused=True,
+            summaries_backend=summaries_backend,
+        )
+        self.driver = PathDriver(self.settings, self.study.agg)
+        self.state = self.driver.fresh_state()
+        self.traces: list = []
+        self.report: PathReport | None = None
+
+    # -- membership passthrough (fold-safe by construction) -------------------
+    def add_institution(self, inst: Institution):
+        self.study.add_institution(inst)
+
+    def remove_institution(self, name: str):
+        self.study.remove_institution(name)
+
+    @property
+    def num_chunks(self) -> int:
+        return self.driver.num_chunks()
+
+    @property
+    def next_chunk(self) -> int:
+        return int(self.state["next_chunk"])
+
+    def finished(self) -> bool:
+        return self.driver.finished(self.state)
+
+    # -- the sweep ------------------------------------------------------------
+    def step_chunk(self):
+        """Advance the path by one λ chunk on the CURRENT cohort.
+
+        Cohort and live centers are re-formed at every chunk boundary —
+        the same fault model as ``StudyCoordinator.step``, at chunk
+        granularity: stragglers/offline institutions are excluded from
+        every round of this chunk (their folds are untouched for when
+        they return), and a below-threshold center set raises before any
+        computation.
+        """
+        cohort = self.study.cohort()
+        if self.settings.protect != "none":
+            points = tuple(c.index for c in self.study.live_centers())
+            num_live = len(points)
+        else:
+            points, num_live = None, None
+        fold_parts = [
+            assign_folds(inst.X.shape[0], self.settings.num_folds,
+                         inst.name, self.settings.fold_seed)
+            for inst in cohort
+        ]
+        self.state = self.driver.run_chunk(
+            self.state, [(i.X, i.y) for i in cohort], fold_parts,
+            points=points, num_live_centers=num_live, traces=self.traces,
+        )
+
+    def run_path(self) -> PathReport:
+        """Run (or resume) the sweep to completion and build the report."""
+        while not self.finished():
+            self.step_chunk()
+        self.report = self.driver.build_report(self.state, self.traces)
+        # surface the selected model on the wrapped coordinator so
+        # downstream protocol tooling (checkpointing, serving) sees the
+        # refit beta as the study's current iterate
+        if self.report.beta is not None:
+            import jax.numpy as jnp
+
+            self.study.beta = jnp.asarray(self.report.beta)
+            self.study.lam = self.report.lambda_1se
+        return self.report
+
+    # -- checkpoint/restart ---------------------------------------------------
+    def state_dict(self) -> dict:
+        # snapshot by copy: run_chunk mutates the sweep arrays in place,
+        # so returning live views would let a captured checkpoint drift
+        # as the sweep advances
+        out = {f"path_{k}": np.array(v) for k, v in self.state.items()}
+        out.update(
+            {f"study_{k}": v for k, v in self.study.state_dict().items()}
+        )
+        return out
+
+    def load_state_dict(self, state: dict):
+        """Restore a mid-path checkpoint.  The sweep state (betas, CV
+        aggregates, rng round counter, byte totals) round-trips exactly;
+        the per-block objective ``traces`` are session-local debugging
+        readbacks and restart empty — a resumed report's ``traces``
+        cover post-resume chunks only, while its totals span the whole
+        sweep."""
+        self.state = {
+            k[len("path_"):]: np.array(v) for k, v in state.items()
+            if k.startswith("path_")
+        }
+        self.study.load_state_dict({
+            k[len("study_"):]: v for k, v in state.items()
+            if k.startswith("study_")
+        })
+        self.traces = []
+        self.report = None

@@ -1,0 +1,432 @@
+"""The secure model-selection subsystem: λ-path CV as batched secure graphs.
+
+Pins the tentpole contracts: (a) the batched scanned sweep converges to
+the same per-(λ, fold) betas as sequential per-fold ``secure_fit`` calls
+(the loop oracle) within fixed-point quantization, picks the same 1-SE λ,
+and its revealed held-out aggregates equal plain evaluation; (b) the
+multi-config secure round batches (C, S)-leading trees through one
+protect/aggregate/reveal chain; (c) the SelectionCoordinator resumes
+mid-path bit-identically, survives churn with fold assignments intact,
+and fails loudly below the center threshold; (d) every secure driver
+shares ONE stopping rule (the boundary-tolerance regression that
+motivated the unification).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Institution,
+    SecureAggregator,
+    secure_fit,
+)
+from repro.core.logreg import deviance as deviance_fn
+from repro.data import generate_synthetic
+from repro.selection import (
+    PathSettings,
+    SelectionCoordinator,
+    assign_folds,
+    one_se_rule,
+    secure_cv_path,
+)
+
+LAMBDAS = (3.0, 1.0, 0.3)
+K = 3
+
+
+@pytest.fixture(scope="module")
+def study():
+    return generate_synthetic(
+        jax.random.PRNGKey(5), num_institutions=4,
+        records_per_institution=300, dim=6,
+    )
+
+
+@pytest.fixture(scope="module")
+def report(study):
+    return secure_cv_path(
+        study.parts, LAMBDAS, num_folds=K, protect="both", seed=0
+    )
+
+
+def _fold_arrays(parts):
+    return [
+        np.asarray(assign_folds(X.shape[0], K, j, 0))
+        for j, (X, _) in enumerate(parts)
+    ]
+
+
+# ------------------------------------------------ sweep vs sequential oracle
+def test_path_matches_sequential_loop_oracle(study, report):
+    """Every (λ, fold) converged beta — and the refit — equals the
+    sequential loop-path secure_fit on the physically-sliced train folds,
+    within fixed-point quantization (the ladder's converged-beta
+    contract for the f32-Gram rung)."""
+    parts = study.parts
+    agg = SecureAggregator(backend="pallas")
+    quant = (len(parts) + 1) / agg.codec.scale
+    folds = _fold_arrays(parts)
+    assert report.fold_converged.all()
+    for li, lam in enumerate(report.lambdas):
+        for k in range(K):
+            train = [(X[f != k], y[f != k])
+                     for (X, y), f in zip(parts, folds)]
+            ref = secure_fit(train, lam=float(lam), protect="both",
+                             aggregator=agg, fused=False)
+            err = np.abs(report.fold_betas[li, k] - ref.beta).max()
+            assert err <= quant, (li, k, err)
+    refit = secure_fit(parts, lam=report.lambda_1se, protect="both",
+                       aggregator=agg, fused=False)
+    assert np.abs(report.beta - refit.beta).max() <= quant
+
+
+def test_revealed_heldout_aggregates_match_plain_eval(study, report):
+    """The revealed per-(λ, fold) validation aggregates == plain
+    evaluation of the fold betas on the held-out slices (sum over
+    institutions), within fixed-point quantization per leaf."""
+    parts = study.parts
+    folds = _fold_arrays(parts)
+    agg = SecureAggregator(backend="pallas")
+    tol = (len(parts) + 1) / agg.codec.scale
+    for li in range(len(report.lambdas)):
+        for k in range(K):
+            beta = jnp.asarray(report.fold_betas[li, k])
+            dev = corr = cnt = 0.0
+            for (X, y), f in zip(parts, folds):
+                va = np.asarray(f) == k
+                Xv, yv = X[va], y[va]
+                dev += float(deviance_fn(beta, Xv, yv))
+                z = np.asarray(Xv @ beta)
+                corr += float(((z > 0) == (np.asarray(yv) > 0.5)).sum())
+                cnt += float(va.sum())
+            assert abs(report.val_deviance[li, k] - dev) <= tol
+            assert report.val_correct[li, k] == corr
+            assert report.val_count[li, k] == cnt
+
+
+def test_warm_start_and_full_batch_agree(study):
+    """lam_block=1 (max warm-start) and lam_block=L (the fully amortized
+    single-batch shape) converge to the same fold betas — Newton's fixed
+    point does not depend on the start — within quantization."""
+    warm = secure_cv_path(study.parts, LAMBDAS, num_folds=K,
+                          protect="gradient", lam_block=1, seed=0)
+    flat = secure_cv_path(study.parts, LAMBDAS, num_folds=K,
+                          protect="gradient", lam_block=len(LAMBDAS),
+                          warm_start=False, seed=0)
+    agg = SecureAggregator(backend="pallas")
+    quant = (len(study.parts) + 1) / agg.codec.scale
+    assert np.abs(warm.fold_betas - flat.fold_betas).max() <= 2 * quant
+    assert warm.lambda_1se == flat.lambda_1se
+    # warm starts must actually save rounds on the tail of the path
+    assert warm.fold_rounds[1:].max() <= flat.fold_rounds[1:].max()
+
+
+def test_protect_none_baseline(study, report):
+    """protect='none' (the DataSHIELD-style insecure baseline) runs the
+    same sweep shape without any secure round and agrees with the
+    protected sweep (the module fixture) to quantization."""
+    plain = secure_cv_path(study.parts, LAMBDAS, num_folds=K,
+                           protect="none", seed=0)
+    agg = SecureAggregator(backend="pallas")
+    quant = (len(study.parts) + 1) / agg.codec.scale
+    assert np.abs(plain.fold_betas - report.fold_betas).max() <= 2 * quant
+    assert plain.bytes_per_round < report.bytes_per_round
+
+
+@pytest.mark.parametrize("kw", [dict(protect="hessian"),
+                                dict(protect="gradient", l1=0.3)])
+def test_path_other_protect_modes_and_elastic_net(kw):
+    """protect='hessian' and the elastic-net (l1 > 0, vmapped prox)
+    sweep also hold converged parity with the sequential loop oracle."""
+    small = generate_synthetic(jax.random.PRNGKey(2), num_institutions=3,
+                               records_per_institution=250, dim=5)
+    rep = secure_cv_path(small.parts, [2.0, 0.5], num_folds=2, seed=4,
+                         **kw)
+    agg = SecureAggregator(backend="pallas")
+    quant = (len(small.parts) + 1) / agg.codec.scale
+    folds = [np.asarray(assign_folds(X.shape[0], 2, j, 0))
+             for j, (X, _) in enumerate(small.parts)]
+    for li, lam in enumerate(rep.lambdas):
+        for k in range(2):
+            train = [(X[f != k], y[f != k])
+                     for (X, y), f in zip(small.parts, folds)]
+            ref = secure_fit(train, lam=float(lam), aggregator=agg,
+                             fused=False, **kw)
+            err = np.abs(rep.fold_betas[li, k] - ref.beta).max()
+            assert err <= 5 * quant, (kw, li, k, err)
+
+
+def test_round_budget_enforced_in_graph_and_metrics_consistent():
+    """max_rounds binds per ROUND (not per scan block), and a config
+    that exhausts its budget unconverged reports the beta its revealed
+    held-out metrics were measured at (break-before-update on the last
+    budgeted round) — the two code-review regressions."""
+    from repro.core.logreg import deviance as dev_fn
+
+    small = generate_synthetic(jax.random.PRNGKey(9), num_institutions=3,
+                               records_per_institution=200, dim=5)
+    rep = secure_cv_path(small.parts, [2.0, 0.5], num_folds=2,
+                         max_rounds=4, rounds_per_sync=3, seed=1)
+    assert rep.fold_rounds.max() <= 4  # not rounded up to a block edge
+
+    rep2 = secure_cv_path(small.parts, [2.0, 0.5], num_folds=2,
+                          max_rounds=2, rounds_per_sync=2, seed=1,
+                          refit=False)
+    assert not rep2.fold_converged.any()
+    assert rep2.fold_rounds.max() == 2
+    folds = [np.asarray(assign_folds(X.shape[0], 2, j, 0))
+             for j, (X, _) in enumerate(small.parts)]
+    for li in range(2):
+        for k in range(2):
+            beta = jnp.asarray(rep2.fold_betas[li, k])
+            want = sum(
+                float(dev_fn(beta, X[f == k], y[f == k]))
+                for (X, y), f in zip(small.parts, folds)
+            )
+            assert abs(rep2.val_deviance[li, k] - want) < 1e-6
+
+
+def test_one_se_rule_unit():
+    lambdas = np.asarray([10.0, 1.0, 0.1])
+    best, pick = one_se_rule(
+        lambdas, np.asarray([5.0, 1.0, 0.99]), np.asarray([0.1, 0.1, 0.1])
+    )
+    assert best == 2       # minimum at the smallest λ
+    assert pick == 1       # 1.0 is within 0.99 + 0.1 -> largest such λ
+    best, pick = one_se_rule(
+        lambdas, np.asarray([1.0, 2.0, 3.0]), np.asarray([0.0, 0.0, 0.0])
+    )
+    assert best == 0 and pick == 0
+
+
+def test_settings_validation():
+    with pytest.raises(ValueError, match="descending"):
+        PathSettings(lambdas=(1.0, 3.0))
+    with pytest.raises(ValueError, match="lam_block"):
+        PathSettings(lambdas=(3.0, 1.0), lam_block=5)
+    with pytest.raises(ValueError, match="protect"):
+        PathSettings(lambdas=(1.0,), protect="everything")
+    with pytest.raises(ValueError, match="max_rounds"):
+        PathSettings(lambdas=(1.0,), max_rounds=0)
+    with pytest.raises(ValueError, match="folds"):
+        PathSettings(lambdas=(1.0,), num_folds=1)
+    with pytest.raises(ValueError, match="descending"):
+        PathSettings(lambdas=(1.0, 1.0))  # duplicates rejected too
+    with pytest.raises(ValueError, match="pallas"):
+        secure_cv_path([(jnp.ones((8, 2)), jnp.ones(8))], [1.0],
+                       num_folds=2,
+                       aggregator=SecureAggregator(backend="reference"))
+
+
+def test_report_telemetry_static_shapes(report):
+    """bytes/round comes from the static size model and matches the
+    actual number of revealed leaves (protect=both: H + g + dev + count
+    + 3 val scalars per config per institution)."""
+    assert report.bytes_per_round > 0
+    # λ-chunk rounds bill at bytes_per_round; the 1-config refit tail
+    # bills at its own (smaller) static figure — the total sits between
+    # the two bounds
+    assert report.bytes_total <= \
+        report.rounds_total * report.bytes_per_round
+    assert report.bytes_total > \
+        (report.rounds_total - report.refit_rounds) \
+        * report.bytes_per_round // 2
+    assert report.traces, "block readbacks must be recorded"
+    # refit happened and is the final model
+    assert report.beta is not None and report.refit_rounds > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("summaries_backend", ["reference", "pallas",
+                                               "mixed"])
+def test_path_oracle_parity_production_shapes(summaries_backend):
+    """`slow` rung sweep at a closer-to-benchmark shape: every summaries
+    rung of the batched sweep holds converged-beta parity with the
+    sequential loop oracle and picks the same λ.  Run with -m slow."""
+    study = generate_synthetic(
+        jax.random.PRNGKey(20), num_institutions=6,
+        records_per_institution=4000, dim=24,
+    )
+    lambdas = (30.0, 3.0, 0.3)
+    rep = secure_cv_path(study.parts, lambdas, num_folds=4,
+                         protect="both", seed=3,
+                         summaries_backend=summaries_backend)
+    agg = SecureAggregator(backend="pallas")
+    quant = (len(study.parts) + 1) / agg.codec.scale
+    folds = [
+        np.asarray(assign_folds(X.shape[0], 4, j, 0))
+        for j, (X, _) in enumerate(study.parts)
+    ]
+    assert rep.fold_converged.all()
+    for li, lam in enumerate(rep.lambdas):
+        for k in range(4):
+            train = [(X[f != k], y[f != k])
+                     for (X, y), f in zip(study.parts, folds)]
+            ref = secure_fit(train, lam=float(lam), protect="both",
+                             aggregator=agg, fused=False)
+            assert np.abs(rep.fold_betas[li, k] - ref.beta).max() <= quant
+
+
+# ------------------------------------------------------ coordinator shape
+def _make_coord(study, **kw):
+    insts = [
+        Institution(f"inst{j}", *study.parts[j])
+        for j in range(len(study.parts))
+    ]
+    kw.setdefault("protect", "gradient")
+    kw.setdefault("seed", 1)
+    return SelectionCoordinator(insts, list(LAMBDAS), num_folds=K, **kw)
+
+
+def test_coordinator_resume_mid_path_bitexact(study):
+    full = _make_coord(study)
+    rep_full = full.run_path()
+
+    part1 = _make_coord(study)
+    part1.step_chunk()
+    part1.step_chunk()
+    snap = {k: np.array(v) for k, v in part1.state_dict().items()}
+
+    part2 = _make_coord(study)
+    part2.load_state_dict(snap)
+    assert part2.next_chunk == 2
+    rep_res = part2.run_path()
+
+    np.testing.assert_array_equal(rep_res.fold_betas, rep_full.fold_betas)
+    np.testing.assert_array_equal(rep_res.beta, rep_full.beta)
+    assert rep_res.lambda_1se == rep_full.lambda_1se
+    assert rep_res.rounds_total == rep_full.rounds_total
+
+
+def test_coordinator_churn_keeps_other_folds(study):
+    """An institution leaving mid-path does not perturb the others'
+    fold assignment, and the sweep completes on the shrunken cohort."""
+    coord = _make_coord(study)
+    coord.step_chunk()
+    coord.remove_institution("inst3")
+    rep = coord.run_path()
+    assert rep.fold_converged.all()
+    # churn-safety: fold ids of remaining institutions are name-pure
+    f_before = np.asarray(assign_folds(300, K, "inst1", 0))
+    f_after = np.asarray(assign_folds(300, K, "inst1", 0))
+    np.testing.assert_array_equal(f_before, f_after)
+
+
+def test_coordinator_center_dropout_raises(study):
+    coord = _make_coord(study)
+    for c in coord.study.centers[1:]:
+        c.online = False
+    with pytest.raises(RuntimeError, match="threshold"):
+        coord.step_chunk()
+
+
+def test_coordinator_surfaces_refit_on_study(study):
+    coord = _make_coord(study)
+    rep = coord.run_path()
+    np.testing.assert_array_equal(np.asarray(coord.study.beta), rep.beta)
+    assert coord.study.lam == rep.lambda_1se
+
+
+# ------------------------------------------------- the one stopping rule
+def test_stop_threshold_semantics():
+    """Unit pin of the shared rule: relative tolerance vs quantization
+    floor, and exact (strict <) behavior AT the boundary — the semantics
+    every driver now inherits from the single implementation."""
+    from repro.core.newton import should_stop, stop_threshold
+
+    scale = 2.0**28
+    # relative regime: threshold = tol * (1 + |obj|)
+    thr = float(stop_threshold(100.0, 1e-6, 4, scale))
+    assert thr == pytest.approx(1e-6 * 101.0)
+    # quantization floor regime: S+1 half-ulps at the codec scale
+    thr = float(stop_threshold(100.0, 1e-15, 4, scale))
+    assert thr == (4 + 1) * 0.5 / scale
+    # strict inequality at the boundary: |delta| == threshold does NOT
+    # stop (matches every pre-unification driver's `<`)
+    obj = 100.0
+    t = float(stop_threshold(obj, 1e-6, 4, scale))
+    assert not bool(should_stop(obj + t, obj, 1e-6, 4, scale))
+    assert bool(should_stop(obj + t * (1 - 1e-6), obj, 1e-6, 4, scale))
+    # vectorizes over a config axis (the selection scan's shape)
+    objs = jnp.asarray([100.0, 200.0])
+    prev = jnp.asarray([100.0 + 1e-9, 250.0])
+    got = np.asarray(should_stop(prev, objs, 1e-6, 4, scale))
+    np.testing.assert_array_equal(got, [True, False])
+
+
+def test_all_drivers_share_one_stopping_rule(study, monkeypatch):
+    """Structural pin of the satellite fix: secure_fit (loop AND fused)
+    and StudyCoordinator (loop AND fused rounds) all route their
+    convergence decision through newton.should_stop and form objectives
+    through newton.regularized_objective — no driver re-derives its own
+    threshold arithmetic, so they cannot drift apart at the tolerance
+    boundary again."""
+    import repro.core.newton as newton_mod
+    import repro.core.protocol as protocol_mod
+    from repro.core import StudyCoordinator
+
+    parts = study.parts
+    agg = SecureAggregator(backend="pallas")
+    seen = []
+    orig = newton_mod.should_stop
+
+    def spy(*a, **k):
+        seen.append(True)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(newton_mod, "should_stop", spy)
+    monkeypatch.setattr(protocol_mod, "should_stop", spy)
+
+    def count(run):
+        del seen[:]
+        run()
+        return len(seen)
+
+    assert count(lambda: secure_fit(parts, aggregator=agg,
+                                    fused=False, max_iter=3)) >= 3
+    assert count(lambda: secure_fit(parts, aggregator=agg,
+                                    fused=True, max_iter=3)) >= 3
+
+    def run_coord(fused):
+        insts = [Institution(f"i{j}", *p) for j, p in enumerate(parts)]
+        c = StudyCoordinator(insts, aggregator=agg, fused=fused)
+        c.run(max_iter=3)
+
+    assert count(lambda: run_coord(False)) >= 3
+    assert count(lambda: run_coord(True)) >= 3
+
+
+def test_loop_and_fused_drivers_agree_on_iteration_count(study):
+    """Agreement pin on the per-round-parity rung: the coordinator's
+    loop and fused rounds (summaries_backend='reference') stop at the
+    same iteration across a sweep of tolerances spanning the relative
+    and quantization-floor regimes, with traces agreeing to the
+    fixed-point grid.  (The fused secure_fit default rides the f32-Gram
+    rung, whose mid-run transient legitimately perturbs objectives
+    within quantization — iteration-count equality is only a contract
+    where per-round parity is, i.e. on the reference rung.)"""
+    from repro.core import StudyCoordinator
+
+    parts = study.parts
+    agg = SecureAggregator(backend="pallas")
+
+    def run(fused, tol):
+        insts = [Institution(f"i{j}", *p) for j, p in enumerate(parts)]
+        c = StudyCoordinator(insts, lam=1.0, protect="both",
+                             aggregator=agg, tol=tol, fused=fused,
+                             summaries_backend="reference")
+        c.run()
+        return c.iteration, np.asarray(c.trace)
+
+    for tol in (3e-4, 1e-6, 1e-8, 1e-11):
+        it_l, tr_l = run(False, tol)
+        it_f, tr_f = run(True, tol)
+        assert it_l == it_f, f"iteration counts diverge at tol={tol}"
+        np.testing.assert_allclose(
+            tr_l, tr_f,
+            atol=(len(parts) + 1) / agg.codec.scale,
+            err_msg=f"traces diverge past quantization at tol={tol}",
+        )
