@@ -6,8 +6,10 @@
 # fused Pallas pipeline is not slower than the reference oracle.  Then
 # runs the e2e fused-Newton smoke (--quick) and asserts secure ==
 # centralized beta (R^2 = 1) and fused == pre-fusion-loop beta within
-# fixed-point quantization.  Run this before merging anything that
-# touches src/repro/core or src/repro/kernels.
+# fixed-point quantization, the secure_psum smoke (sharded flat wire
+# payload <= 0.55x the per-leaf uint64 tree, bit-equal reveals), and the
+# lambda-path smoke.  Run this before merging anything that touches
+# src/repro/core or src/repro/kernels.
 #
 # BENCH_FULL=1 additionally refreshes BENCH_e2e_secure_fit.json at the
 # full acceptance config (S=8, d=128, N=2e5; several minutes).
@@ -84,6 +86,35 @@ if failures:
 print("e2e smoke OK")
 EOF
 
+echo "== secure_psum smoke (flat sharded wire vs per-leaf uint64 tree) =="
+python benchmarks/secure_psum.py --quick >/dev/null
+
+python - <<'EOF'
+import json, sys
+
+rows = json.load(open("BENCH_secure_psum_smoke.json"))
+failures = []
+saw_payload = False
+for r in rows:
+    if "path" in r and not r["pass"]:
+        failures.append(f"secure_psum reveal inexact: {r}")
+    if r.get("check") == "sharded payload vs per_leaf":
+        saw_payload = True
+        print(f"sharded payload ratio: {r['sharded_ratio']:.3f}x "
+              f"(replicated {r['replicated_ratio']:.3f}x, "
+              f"oracle err {r['max_abs_err_vs_oracle']:.3g})")
+        if r["sharded_ratio"] > 0.55:
+            failures.append(f"sharded payload above 0.55x per-leaf: {r}")
+        if r["max_abs_err_vs_oracle"] != 0.0:
+            failures.append(f"flat wire disagrees with per-leaf oracle: {r}")
+if not saw_payload:
+    failures.append("payload check row missing from secure_psum smoke")
+if failures:
+    print("\n".join("FAIL: " + f for f in failures))
+    sys.exit(1)
+print("secure_psum smoke OK")
+EOF
+
 echo "== lambda-path selection smoke (batched sweep vs sequential oracle) =="
 python benchmarks/lambda_path.py --quick \
     --json BENCH_lambda_path_smoke.json >/dev/null
@@ -133,6 +164,21 @@ if bad:
     print(f"FAIL: full e2e gate: {bad}")
     sys.exit(1)
 print("full e2e gate OK")
+EOF
+    echo "== secure_psum FULL (refreshes BENCH_secure_psum.json) =="
+    python benchmarks/secure_psum.py >/dev/null
+    python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_secure_psum.json"))
+bad = [r for r in rows if not r["pass"]]
+wall = [r for r in rows if r.get("check") == "sharded wallclock vs per_leaf"]
+if not wall:
+    print("FAIL: wall-clock check row missing from BENCH_secure_psum.json")
+    sys.exit(1)
+if bad:
+    print(f"FAIL: full secure_psum gate: {bad}")
+    sys.exit(1)
+print(f"full secure_psum gate OK ({wall[0]['speedup']:.2f}x vs per-leaf)")
 EOF
     echo "== lambda-path FULL (refreshes BENCH_lambda_path.json) =="
     python benchmarks/lambda_path.py >/dev/null

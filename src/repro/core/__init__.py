@@ -15,7 +15,9 @@ from .flatbuf import FlatLayout, pack_pytree, pack_pytree_batched, unpack_pytree
 from .shamir import ShamirScheme
 from .secure_agg import (
     FlatProtected,
+    REVEAL_MODES,
     SecureAggregator,
+    check_aggregation_headroom,
     secure_add,
     secure_psum,
     secure_scale_by_public,
@@ -31,7 +33,8 @@ __all__ = [
     "PackedPartitions", "batched_local_summaries", "pack_partitions",
     "CVSummaries", "batched_cv_summaries",
     "pack_cache_clear", "pack_cache_evict", "pack_cache_len",
-    "SecureAggregator", "secure_add", "secure_psum", "secure_scale_by_public",
+    "REVEAL_MODES", "SecureAggregator", "check_aggregation_headroom",
+    "secure_add", "secure_psum", "secure_scale_by_public",
     "LocalSummaries", "local_summaries", "predict_proba", "deviance",
     "FitResult", "centralized_fit", "newton_step", "secure_fit",
     "ComputationCenter", "Institution", "RoundReport", "StudyCoordinator",

@@ -13,6 +13,15 @@ magnitude stays below ``field.max_signed / 2**frac_bits``.  ``capacity()``
 exposes that bound so protocol code can assert headroom (e.g. S institutions
 x max |H_ij| each).  Quantization happens once, at encode time.
 
+Values past capacity saturate (clip to +-max_signed) rather than wrap — a
+wrapped aggregate would reveal as an arbitrary float, a saturated one at
+least as the capacity bound.  Saturation is still silently *wrong*, so the
+protect paths offer a debug-mode overflow check (``check_headroom`` /
+``encode(..., check=True)``): a host assert that raises ``OverflowError``
+the moment any value exceeds capacity, eagerly outside jit and at the next
+sync point inside (the same condition ``SecureAggregator.headroom_ok``
+expresses as a predicate).
+
 The Pallas backend fuses this codec into the share/reconstruct kernels
 (``kernels.shamir_poly.shamir_encode_share_pallas`` mirrors ``encode``
 bit-for-bit via an exact float hi/lo split; the reconstruct kernel emits
@@ -23,11 +32,24 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 from .field import FieldSpec, FIELD_WIDE, crt_combine_signed, lift_signed
 
 __all__ = ["FixedPointCodec"]
+
+
+def _overflow_cb(max_abs, *, bound: float, capacity: float, what: str):
+    """Host-side assert behind ``jax.debug.callback``: raises eagerly in
+    op-by-op mode and at the next device sync under jit/shard_map."""
+    if float(max_abs) > bound:
+        raise OverflowError(
+            f"fixed-point overflow in {what}: max |value| {float(max_abs):g} "
+            f"exceeds the codec capacity {capacity:g} — the aggregate would "
+            "saturate and reveal a plausible-but-wrong float (see "
+            "SecureAggregator.headroom_ok for the aggregate bound)"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,10 +68,36 @@ class FixedPointCodec:
         """Largest |real value| exactly representable (incl. aggregates)."""
         return self.field.max_signed / self.scale
 
-    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
-        """float array (...) -> field residues (R, ...) uint64."""
+    def check_headroom(self, x: jnp.ndarray, num_addends: int = 1,
+                       what: str = "protect"):
+        """Debug-mode overflow assert on a float tensor headed for encode.
+
+        Raises ``OverflowError`` when ``num_addends * max|x|`` exceeds
+        ``capacity()`` — the predicate ``headroom_ok`` tests, turned into a
+        hard failure so saturation can never masquerade as a valid reveal.
+        Traceable: inside jit the assert fires at the next sync point.
+        """
+        cap = self.capacity()
+        jax.debug.callback(
+            _overflow_cb,
+            jnp.max(jnp.abs(jnp.asarray(x, jnp.float64))),
+            bound=cap / max(1, num_addends), capacity=cap, what=what,
+        )
+
+    def encode(self, x: jnp.ndarray, check: bool = False) -> jnp.ndarray:
+        """float array (...) -> field residues (R, ...) uint64.
+
+        ``check=True`` arms the debug-mode overflow assert: values whose
+        scaled magnitude exceeds ``field.max_signed`` raise instead of
+        silently saturating at the clip below.
+        """
         scaled = jnp.round(jnp.asarray(x, jnp.float64) * self.scale)
         lim = float(self.field.max_signed)
+        if check:
+            jax.debug.callback(
+                _overflow_cb, jnp.max(jnp.abs(scaled)),
+                bound=lim, capacity=self.capacity(), what="encode",
+            )
         scaled = jnp.clip(scaled, -lim, lim)
         return lift_signed(scaled.astype(jnp.int64), self.field)
 

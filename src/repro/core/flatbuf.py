@@ -12,7 +12,10 @@ Layout contract:
 
 * Leaves are raveled in ``tree_flatten`` order and concatenated.
 * The tail is zero-padded up to ``rows * 128`` with ``rows`` a multiple of
-  ``row_align`` (8 — the float32 sublane tile; also fine for uint32).
+  ``row_align`` (default 8 — the float32 sublane tile; also fine for
+  uint32.  The sharded ``secure_psum`` wire passes ``lcm(8, D)`` so the
+  rows axis reduce-scatters into per-device tiles that keep the (8, 128)
+  sublane layout).
 * ``FlatLayout`` remembers treedef + shapes + dtypes so ``unpack`` is exact.
 
 Padding is benign end to end: zero floats encode to residue 0, shares of 0

@@ -13,10 +13,28 @@ Two deployment styles:
 * **Host-side protocol** (paper-faithful simulation, `SecureAggregator`):
   explicit share tensors (w, R, ...) flow institution -> centers -> reveal.
 * **In-SPMD** (`secure_psum`): inside a pjit/shard_map program, each pod
-  (institution) encodes + shares its local aggregate, a `psum` over the pod
-  axis performs Algorithm 2 across institutions *share-wise in the field*,
-  and only the global sum is reconstructed.  This is the drop-in replacement
-  for a plain gradient all-reduce used by `--secure-agg shamir` training.
+  (institution) packs its local float tree into ONE flat (rows, 128) tile
+  buffer, pushes it through the fused encode+share kernel, and all-reduces
+  a single uint32 share buffer over the pod axis — Algorithm 2 executed
+  share-wise in the field.  Only the *threshold subset* of share slices is
+  ever evaluated or transmitted (t of w, at half the element width of the
+  old per-leaf uint64 tree), and only the global sum is revealed.  This is
+  the drop-in replacement for a plain gradient all-reduce used by
+  ``--secure-agg shamir`` training.  Two reveal modes:
+
+  - ``reveal="replicated"`` (default): the t-slice buffer is `psum`-ed
+    whole and every device runs the fused Lagrange+CRT reveal on its copy
+    (programming-model convenience, matches the old behavior).
+  - ``reveal="sharded"``: the share buffer is reduce-scattered over the
+    pod axis, so each device only ever holds — and the wire only ever
+    moves — a 1/D row-slice of the distributed residues; each device
+    reveals its slice and a final all-gather assembles the decoded float
+    aggregate.  Roughly halves the all-reduce payload again (the gathered
+    plaintext aggregate is far smaller than the share buffer).
+
+  The reference per-leaf path (``aggregator.backend == "reference"``)
+  remains available as the bit-exactness oracle; tests parametrize over
+  both like the protect/reveal backend switches.
 
 Backends and the flat-buffer hot path
 -------------------------------------
@@ -46,11 +64,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from ..distributed.compat import axis_size as _compat_axis_size
 from .field import (
     FieldSpec,
     FIELD_WIDE,
@@ -63,6 +83,7 @@ from .fixed_point import FixedPointCodec
 from .flatbuf import (
     FlatLayout,
     LANES,
+    ROW_ALIGN,
     pack_pytree,
     pack_pytree_batched,
     unpack_pytree,
@@ -72,10 +93,32 @@ from .shamir import ShamirScheme
 __all__ = [
     "secure_add",
     "secure_scale_by_public",
+    "check_aggregation_headroom",
     "FlatProtected",
     "SecureAggregator",
     "secure_psum",
+    "REVEAL_MODES",
 ]
+
+REVEAL_MODES = ("replicated", "sharded")
+
+
+def check_aggregation_headroom(num_addends: int, field: FieldSpec) -> None:
+    """Guard the exact-uint64 share sum: ``S * max(p_r) < 2**64``.
+
+    Every aggregation path (streaming fold, batched reduction, in-SPMD
+    psum) accumulates reduced share elements (< p_r) in uint64 and applies
+    ONE trailing mod, which is exact iff the unreduced sum cannot wrap.
+    This is the single shared bound — ~2**33 institutions for the 31-bit
+    moduli — enforced here so no path carries its own (historically
+    inconsistent) claim.
+    """
+    if num_addends * max(field.moduli) >= 2**64:
+        raise ValueError(
+            f"cannot aggregate {num_addends} share tensors exactly: "
+            f"{num_addends} * max modulus {max(field.moduli)} >= 2**64 "
+            "would overflow the uint64 accumulator before the trailing mod"
+        )
 
 
 def secure_add(a, b, field: FieldSpec, residue_axis: int = 0):
@@ -135,12 +178,13 @@ def _fsum_batched(stacked, field: FieldSpec, residue_axis: int):
 def _fold_sum_streaming(submissions, field: FieldSpec, residue_axis: int):
     """Share-wise sum of S submissions WITHOUT materializing an S-stack.
 
-    A running uint64 accumulator folds the submissions one by one (exact:
-    S reduced elements sum below 2**64 for any S < 2**33) with a single
-    mod at the end.  XLA fuses the unrolled chain into one elementwise
-    loop over donation-sized buffers, so peak memory is one accumulator —
-    not the (S, ...) stack the eager ``jnp.stack`` reduction allocated,
-    which at 1e6+ params made ``aggregate`` allocation-bound.
+    A running uint64 accumulator folds the submissions one by one with a
+    single mod at the end — exact iff ``S * max(p_r) < 2**64``, the shared
+    bound ``check_aggregation_headroom`` enforces on every caller.  XLA
+    fuses the unrolled chain into one elementwise loop over donation-sized
+    buffers, so peak memory is one accumulator — not the (S, ...) stack
+    the eager ``jnp.stack`` reduction allocated, which at 1e6+ params made
+    ``aggregate`` allocation-bound.
     """
     acc = jax.tree_util.tree_map(
         lambda x: x.astype(jnp.uint64), submissions[0]
@@ -158,9 +202,10 @@ def _fold_sum_streaming(submissions, field: FieldSpec, residue_axis: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scheme", "frac_bits", "rows")
+    jax.jit, static_argnames=("scheme", "frac_bits", "rows", "points")
 )
-def _protect_flat(key, buf, scheme: ShamirScheme, frac_bits: int, rows: int):
+def _protect_flat(key, buf, scheme: ShamirScheme, frac_bits: int, rows: int,
+                  points: tuple[int, ...] | None = None):
     from ..kernels import ops
 
     field = scheme.field
@@ -169,8 +214,8 @@ def _protect_flat(key, buf, scheme: ShamirScheme, frac_bits: int, rows: int):
     ).astype(jnp.uint32)  # (R, t-1, rows, 128)
     return ops.shamir_protect_flat(
         buf, coeffs, scheme.num_shares, field.moduli, frac_bits,
-        interpret=scheme.interpret,
-    )  # (w, R, rows, 128) uint32
+        interpret=scheme.interpret, points=points,
+    )  # (len(points) or w, R, rows, 128) uint32
 
 
 @functools.partial(
@@ -193,11 +238,22 @@ class SecureAggregator:
     ``backend=None`` inherits the scheme's backend; passing "pallas" or
     "reference" overrides the scheme to match (convenience so callers can
     write ``SecureAggregator(backend="pallas")``).
+
+    ``overflow_check=True`` arms the debug-mode fixed-point overflow
+    assert on every protect path: a value past the capacity bound raises
+    ``OverflowError`` (eagerly outside jit, at the next sync inside)
+    instead of silently saturating into a plausible-but-wrong reveal —
+    the hard-failure form of the ``headroom_ok`` predicate.  Paths that
+    know the addend count (``protect_batched`` over S institutions,
+    ``secure_psum`` over D devices) tighten the bound to
+    ``capacity / S`` so an aggregate that would overflow is caught at
+    protect time, not revealed wrong.
     """
 
     scheme: ShamirScheme = ShamirScheme()
     codec: FixedPointCodec = FixedPointCodec()
     backend: str | None = None
+    overflow_check: bool = False
 
     def __post_init__(self):
         if self.backend is None:
@@ -221,11 +277,16 @@ class SecureAggregator:
         """
         if self.backend == "pallas":
             buf, layout = pack_pytree(tree)
+            if self.overflow_check:
+                self.codec.check_headroom(buf, what="protect")
             shares = _protect_flat(
                 key, buf, self.scheme, self.codec.frac_bits, layout.rows
             )
             return FlatProtected(shares, layout)
-        encoded = jax.tree_util.tree_map(self.codec.encode, tree)
+        encoded = jax.tree_util.tree_map(
+            functools.partial(self.codec.encode, check=self.overflow_check),
+            tree,
+        )
         return self.scheme.share_pytree(key, encoded)
 
     def protect_batched(self, key: jax.Array, tree):
@@ -241,6 +302,12 @@ class SecureAggregator:
         if self.backend != "pallas":
             raise ValueError("protect_batched requires the pallas backend")
         buf, layout = pack_pytree_batched(tree)
+        if self.overflow_check:
+            # the S slices will be summed: bound each by capacity / S so
+            # the AGGREGATE cannot overflow (the headroom_ok contract)
+            self.codec.check_headroom(
+                buf, num_addends=buf.shape[0], what="protect_batched"
+            )
         s_dim, rows = buf.shape[0], layout.rows
         shares = _protect_flat(
             key, buf.reshape(s_dim * rows, LANES), self.scheme,
@@ -265,6 +332,7 @@ class SecureAggregator:
         if len(protected) == 1:
             return protected[0]
         field = self.scheme.field
+        check_aggregation_headroom(len(protected), field)
         # leaves are (w, R, ...) protect outputs: residue axis 1 (same
         # contract as secure_add)
         return _fold_sum_streaming(tuple(protected), field, residue_axis=1)
@@ -276,11 +344,19 @@ class SecureAggregator:
         share buffer — Algorithm 2 for all S submissions in a single
         dispatch, with no per-submission stacking step.
         """
+        check_aggregation_headroom(protected.buf.shape[2], self.scheme.field)
         buf = fsum(protected.buf, self.scheme.field, axis=2, residue_axis=1)
         return FlatProtected(buf, protected.layout)
 
     def _validated_points(self, points) -> tuple[int, ...]:
-        """Normalize + sanity-check reveal points (1-based, distinct)."""
+        """Normalize + sanity-check reveal points (1-based, distinct).
+
+        ``None`` defaults to the first t points — the SAME t-subset
+        default every reveal path uses (reconstruction from any t shares
+        is exact, so a t-subset reveal is bit-identical to the all-w one
+        and does strictly less work).  Below-threshold subsets are
+        rejected here, before any reduction over a short share axis.
+        """
         w = self.scheme.num_shares
         if points is None:
             points = tuple(range(1, self.scheme.threshold + 1))
@@ -289,6 +365,12 @@ class SecureAggregator:
             raise ValueError(f"points must be in 1..{w}, got {points}")
         if len(set(points)) != len(points):
             raise ValueError(f"points must be distinct, got {points}")
+        if len(points) < self.scheme.threshold:
+            raise ValueError(
+                f"need >= t={self.scheme.threshold} shares, got "
+                f"{len(points)} (information-theoretically irrecoverable "
+                "below threshold)"
+            )
         return points
 
     def secure_round_batched(self, key: jax.Array, tree,
@@ -342,12 +424,6 @@ class SecureAggregator:
         traceable; this runs inside the selection scan's jitted graph.
         """
         points = self._validated_points(points)
-        if len(points) < self.scheme.threshold:
-            raise ValueError(
-                f"need >= t={self.scheme.threshold} shares, got "
-                f"{len(points)} (information-theoretically irrecoverable "
-                "below threshold)"
-            )
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         if not leaves:
             raise ValueError("cannot run a round on an empty pytree")
@@ -364,6 +440,7 @@ class SecureAggregator:
         w, num_r, _, rows, lanes = prot.buf.shape
         by_config = prot.buf.reshape(w, num_r, c_dim, s_dim, rows, lanes)
         # Algorithm 2 per config: exact uint64 reduction over institutions
+        check_aggregation_headroom(s_dim, self.scheme.field)
         aggd = fsum(by_config, self.scheme.field, axis=3, residue_axis=1)
         sel = jnp.asarray([p - 1 for p in points])
         stacked = aggd[sel].reshape(len(points), num_r, c_dim * rows, lanes)
@@ -381,25 +458,53 @@ class SecureAggregator:
 
         In deployment this is the only step that requires >= t centers to
         cooperate, and it is only ever invoked on *global* aggregates.
+
+        ``points=None`` assumes the share slices are in holder order
+        (1..k, as ``protect`` emits them) and reconstructs from the first
+        t — the unified ``_validated_points`` default on BOTH backends.
+        Reconstruction from any t-subset is exact field arithmetic, so the
+        result is bit-identical to an all-k reveal at a fraction of the
+        Lagrange work.  Pass explicit ``points`` when the slices are a
+        non-contiguous center subset (then they must match the slice
+        count).
         """
+        t = self.scheme.threshold
         if isinstance(protected, FlatProtected):
             k = protected.buf.shape[0]
-            pts = tuple(points) if points is not None else tuple(
-                range(1, k + 1)
-            )
-            if len(pts) != k:
-                raise ValueError("points must match share count")
-            if k < self.scheme.threshold:
+            if k < t:
                 raise ValueError(
-                    f"need >= t={self.scheme.threshold} shares, got {k} "
+                    f"need >= t={t} shares, got {k} "
                     "(information-theoretically irrecoverable below "
                     "threshold)"
                 )
+            if points is None:
+                buf = protected.buf[:t] if k > t else protected.buf
+                pts = self._validated_points(None)
+            else:
+                buf = protected.buf
+                pts = self._validated_points(points)
+                if len(pts) != k:
+                    raise ValueError("points must match share count")
             flat = _reveal_flat(
-                protected.buf, self.scheme, self.codec.frac_bits, pts
+                buf, self.scheme, self.codec.frac_bits, pts
             )
             return unpack_pytree(flat, protected.layout, dtype=dtype)
-        recon = self.scheme.reconstruct_pytree(protected, points)
+        if points is None:
+            # same t-subset default as the flat path: slice each leaf's
+            # holder axis down to the first t shares before reconstructing
+            leaves = jax.tree_util.tree_leaves(protected)
+            k = leaves[0].shape[0] if leaves else 0
+            if k < t:
+                raise ValueError(
+                    f"need >= t={t} shares, got {k} "
+                    "(information-theoretically irrecoverable below "
+                    "threshold)"
+                )
+            protected = jax.tree_util.tree_map(
+                lambda s: s[:t], protected
+            )
+            points = self._validated_points(None)
+        recon = self.scheme.reconstruct_pytree(protected, list(points))
         return jax.tree_util.tree_map(
             lambda v: self.codec.decode(v, dtype=dtype), recon
         )
@@ -409,34 +514,131 @@ class SecureAggregator:
         return max_abs * num_institutions < self.codec.capacity()
 
 
+def _field_allreduce(shares, axis_name: str, field: FieldSpec,
+                     residue_axis: int = 1, scatter_axis: int | None = None):
+    """Exact share-wise field sum over a mesh axis (Algorithm 2 on the wire).
+
+    The accumulation widens to uint64 so XLA's collective (which has no
+    per-hop modular reduction) stays exact — the shared
+    ``check_aggregation_headroom`` bound ``S * max(p_r) < 2**64`` — and a
+    single trailing mod returns the reduced wire dtype.  A deployment
+    fabric doing per-hop modular adds would move the reduced uint32
+    elements instead; the payload accounting counts those (see
+    ``benchmarks/secure_psum.py``).
+
+    ``scatter_axis=None`` all-reduces (every device gets the full summed
+    buffer); an integer reduce-scatters that axis so each device keeps
+    only its 1/D tile of the distributed residues.
+    """
+    summed = jax.lax.psum(shares.astype(jnp.uint64), axis_name) \
+        if scatter_axis is None else jax.lax.psum_scatter(
+            shares.astype(jnp.uint64), axis_name,
+            scatter_dimension=scatter_axis, tiled=True,
+        )
+    return (summed % field._bcast(summed, residue_axis)).astype(shares.dtype)
+
+
+def _secure_psum_per_leaf(tree, axis_name: str, key: jax.Array,
+                          agg: SecureAggregator, points: tuple[int, ...],
+                          dtype):
+    """The original per-leaf uint64 wire: the bit-exactness oracle.
+
+    Protects leaf by leaf through the reference pipeline and all-reduces
+    every holder's full (w, R, ...) uint64 share tree — w * R * 8 bytes
+    per parameter on the wire, reconstruction on every device.  Kept (and
+    parametrized in tests) as the oracle the flat-buffer wire is measured
+    against; new code wants the flat path.
+    """
+    protected = agg.protect(key, tree)
+    aggregated = jax.tree_util.tree_map(
+        lambda s: _field_allreduce(s, axis_name, agg.scheme.field), protected
+    )
+    sel = jnp.asarray([p - 1 for p in points])
+    subset = jax.tree_util.tree_map(lambda s: s[sel], aggregated)
+    return agg.reveal(subset, points=points, dtype=dtype)
+
+
 def secure_psum(tree, axis_name: str, key: jax.Array,
                 aggregator: SecureAggregator | None = None,
-                dtype=jnp.float32):
+                dtype=jnp.float32, reveal: str = "replicated",
+                points: Sequence[int] | None = None):
     """Secret-shared all-reduce over a mesh axis (SPMD Algorithm 1, 11-13).
 
-    Per device: fixed-point-encode local float tree, Shamir-share it (fresh
-    randomness per device via axis-index key folding), `psum` the share
-    tensors over ``axis_name`` — which IS Algorithm 2 executed by the w
-    virtual Computation Centers — then reconstruct + decode the global sum.
+    Per device: pack the local float tree into ONE flat (rows, 128) tile
+    buffer, push it through the fused fixed-point-encode + Horner-share
+    kernel (fresh randomness per device via axis-index key folding), and
+    reduce the uint32 share buffer over ``axis_name`` — which IS Algorithm
+    2 executed by the virtual Computation Centers — then reveal + decode
+    only the global sum via the fused Lagrange+CRT kernel.  Only the
+    ``points`` subset of share slices (default: the first t, the unified
+    reveal default) is ever evaluated or transmitted, so the wire carries
+    a (t, R, rows, 128) uint32 buffer — t/w of the slices at half the
+    element width of the per-leaf uint64 tree.
 
-    The reconstruction here happens on every device for programming-model
-    convenience; cryptographically the shares are still only ever *combined*
-    (never individually revealed) before the aggregate reconstruction, which
-    matches the paper's trust model where centers jointly reveal aggregates.
+    ``reveal`` selects where the residues live between reduction and
+    decode:
+
+    * ``"replicated"`` — one `psum`; every device holds the full summed
+      share buffer and reconstructs its own copy of the aggregate
+      (programming-model convenience, the pre-sharded behavior).
+    * ``"sharded"`` — `psum_scatter` over the rows axis: each device only
+      ever holds a 1/D row-tile of the aggregated residues, reveals just
+      that tile, and a final all-gather assembles the *decoded* float
+      aggregate — the share buffer crosses the wire once instead of
+      twice, cutting the all-reduce payload roughly in half (the gathered
+      plaintext is ``dtype``-sized, far smaller than the share buffer).
+
+    Passing ``aggregator=SecureAggregator(backend="reference")`` selects
+    the original per-leaf uint64 wire (replicated reveal only) — the
+    bit-exactness oracle.  Cryptographically, both modes only ever
+    *combine* shares (never reveal an individual contribution) before the
+    aggregate reconstruction, matching the paper's trust model where
+    centers jointly reveal aggregates.
     """
-    agg = aggregator or SecureAggregator()
+    agg = aggregator or SecureAggregator(backend="pallas")
+    if reveal not in REVEAL_MODES:
+        raise ValueError(f"reveal must be one of {REVEAL_MODES}")
+    pts = agg._validated_points(points)
+    num_devices = _compat_axis_size(axis_name)
+    check_aggregation_headroom(num_devices, agg.scheme.field)
+    if agg.overflow_check:
+        # every device's contribution is bounded by capacity / D so the
+        # D-way field sum cannot overflow (headroom_ok, hard-failure form)
+        jax.tree_util.tree_map(
+            lambda leaf: agg.codec.check_headroom(
+                leaf, num_addends=num_devices, what="secure_psum"
+            ),
+            tree,
+        )
     idx = jax.lax.axis_index(axis_name)
     key = jax.random.fold_in(key, idx)
-    protected = agg.protect(key, tree)
+    if agg.backend != "pallas":
+        if reveal != "replicated":
+            raise ValueError(
+                "reveal='sharded' needs the flat-buffer wire (pallas "
+                "backend); the per-leaf reference oracle is replicated-only"
+            )
+        return _secure_psum_per_leaf(tree, axis_name, key, agg, pts, dtype)
 
-    def field_psum(shares):
-        # uint64 psum is exact; reduce mod p afterwards (S * p < 2**64 for
-        # any realistic institution count, guard: S < 2**31).
-        summed = jax.lax.psum(shares.astype(jnp.uint64), axis_name)
-        p = agg.scheme.field.moduli_array().reshape(
-            (1, agg.scheme.field.num_residues) + (1,) * (shares.ndim - 2)
-        )
-        return (summed % p).astype(shares.dtype)
-
-    aggregated = jax.tree_util.tree_map(field_psum, protected)
-    return agg.reveal(aggregated, dtype=dtype)
+    # sharded reveal scatters the rows axis: align rows to lcm(8, D) so
+    # every device's tile keeps the (8, 128) sublane layout (the zero
+    # tail packs to zero shares — benign through reduce and reveal)
+    row_align = ROW_ALIGN if reveal == "replicated" else math.lcm(
+        ROW_ALIGN, num_devices
+    )
+    buf, layout = pack_pytree(tree, row_align=row_align)
+    shares = _protect_flat(
+        key, buf, agg.scheme, agg.codec.frac_bits, layout.rows, points=pts
+    )  # (t', R, rows, 128) uint32 — only the reveal subset exists
+    if reveal == "replicated":
+        summed = _field_allreduce(shares, axis_name, agg.scheme.field)
+        flat = _reveal_flat(summed, agg.scheme, agg.codec.frac_bits, pts)
+        return unpack_pytree(flat, layout, dtype=dtype)
+    tile = _field_allreduce(
+        shares, axis_name, agg.scheme.field, scatter_axis=2
+    )  # (t', R, rows / D, 128): this device's slice of the residues
+    flat_tile = _reveal_flat(
+        tile, agg.scheme, agg.codec.frac_bits, pts
+    ).astype(dtype)  # decode locally, gather plaintext (dtype-sized)
+    flat = jax.lax.all_gather(flat_tile, axis_name, axis=0, tiled=True)
+    return unpack_pytree(flat, layout, dtype=dtype)

@@ -1,5 +1,5 @@
-from .compat import make_mesh, shard_map
-from .sharding import MeshRules, param_pspec, param_shardings
+from .compat import axis_size, make_mesh, shard_map
+from .sharding import MeshRules, POD_AXIS, param_pspec, param_shardings
 
-__all__ = ["MeshRules", "make_mesh", "param_pspec", "param_shardings",
-           "shard_map"]
+__all__ = ["MeshRules", "POD_AXIS", "axis_size", "make_mesh", "param_pspec",
+           "param_shardings", "shard_map"]

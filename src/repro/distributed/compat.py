@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "make_mesh"]
+__all__ = ["shard_map", "make_mesh", "axis_size"]
 
 _NEW_SHARD_MAP = getattr(jax, "shard_map", None)
 if _NEW_SHARD_MAP is None:  # jax <= 0.4.x
@@ -35,6 +35,21 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=check_vma,
     )
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a mapped mesh axis, from inside shard_map/pmap.
+
+    Modern jax spells this ``jax.lax.axis_size``; on 0.4.x the equivalent
+    is ``lax.psum(1, axis)``, which is evaluated eagerly for non-tracer
+    operands and returns a Python int.  Callers rely on the result being
+    static (it sizes reduce-scatter tiles and exact-sum overflow guards),
+    so both spellings resolve at trace time.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return int(fn(axis_name))
+    return int(jax.lax.psum(1, axis_name))
 
 
 def make_mesh(axis_shapes, axis_names):

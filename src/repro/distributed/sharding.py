@@ -8,8 +8,11 @@ projections are column-parallel over heads when ``H % tp == 0`` and fall
 back to row-parallel over d_model (XLA inserts the psum) otherwise.  The
 rules are name-based over the parameter pytree paths, MaxText-style.
 
-Institutions (the paper's parties) map to the "pod" axis; all data-parallel
-batch axes are ("pod", "data") in multi-pod meshes.
+Institutions (the paper's parties) map to the ``POD_AXIS`` ("pod") axis;
+all data-parallel batch axes are ("pod", "data") in multi-pod meshes.
+``secure_psum`` runs over ``POD_AXIS`` — it is the axis whose all-reduce
+the secret-shared wire replaces — so mesh builders, the secure-psum
+benchmark and the SPMD tests all take the name from here.
 """
 from __future__ import annotations
 
@@ -20,7 +23,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["MeshRules", "param_pspec", "param_shardings"]
+__all__ = ["MeshRules", "POD_AXIS", "param_pspec", "param_shardings"]
+
+# The institution axis: one paper party per pod.  secure_psum's share
+# reductions (and the sharded reveal's reduce-scatter) run over this axis.
+POD_AXIS = "pod"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +37,7 @@ class MeshRules:
     mesh: Mesh | None = None
     tp_axis: str = "model"
     fsdp: bool = True
+    pod_axis: str = POD_AXIS
 
     @property
     def dp_axes(self):

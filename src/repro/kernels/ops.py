@@ -195,12 +195,17 @@ def shamir_protect_flat(
     moduli: tuple[int, ...],
     frac_bits: int,
     interpret: bool = True,
+    points: tuple[int, ...] | None = None,
 ) -> jnp.ndarray:
     """Fused fixed-point encode + share of a flat buffer in ONE launch.
 
-    Returns (num_shares, R, rows, 128) uint32 — the holder axis leads so a
-    Computation Center's slice is ``out[j]``.  Zero-padded tail rows encode
-    to zero shares (benign through aggregate/reveal).
+    Returns (len(points), R, rows, 128) uint32 — the holder axis leads so
+    a Computation Center's slice is ``out[j]``.  ``points`` (default the
+    full 1..num_shares fan-out) selects which public evaluation points are
+    emitted: the in-SPMD ``secure_psum`` wire only transmits a threshold
+    subset, so it asks for exactly those slices and the kernel never
+    evaluates the rest.  Zero-padded tail rows encode to zero shares
+    (benign through aggregate/reveal).
     """
     rows = buf.shape[0]
     rows_pad, block_rows = _flat_blocking(rows, interpret)
@@ -213,7 +218,8 @@ def shamir_protect_flat(
     out = shamir_encode_share_pallas(
         bufp, coeffsp, num_shares, tuple(moduli), frac_bits,
         block_rows=block_rows, interpret=interpret,
-    )  # (R, w, rows_pad, 128)
+        points=tuple(points) if points is not None else None,
+    )  # (R, len(points), rows_pad, 128)
     return jnp.swapaxes(out, 0, 1)[:, :, :rows]
 
 

@@ -149,7 +149,7 @@ def _float_mod(s_abs, neg, p: int):
 
 
 def _encode_share_kernel(
-    x_ref, coeffs_ref, out_ref, *, num_shares, moduli, scale, max_signed
+    x_ref, coeffs_ref, out_ref, *, points, moduli, scale, max_signed
 ):
     t_minus_1 = coeffs_ref.shape[1]
     x = x_ref[...]
@@ -158,12 +158,12 @@ def _encode_share_kernel(
     s_abs = jnp.abs(s)
     for r, p in enumerate(moduli):
         secret = _float_mod(s_abs, neg, p)
-        for j in range(1, num_shares + 1):
+        for out_idx, j in enumerate(points):
             xj = np.uint32(j)
             acc = jnp.zeros_like(secret)
             for k in range(t_minus_1 - 1, -1, -1):
                 acc = addmod(mulmod31(acc, xj, p), coeffs_ref[r, k], p)
-            out_ref[r, j - 1, ...] = addmod(
+            out_ref[r, out_idx, ...] = addmod(
                 mulmod31(acc, xj, p), secret, p
             )
 
@@ -171,7 +171,8 @@ def _encode_share_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "num_shares", "moduli", "frac_bits", "block_rows", "interpret"
+        "num_shares", "moduli", "frac_bits", "block_rows", "interpret",
+        "points",
     ),
 )
 def shamir_encode_share_pallas(
@@ -182,10 +183,17 @@ def shamir_encode_share_pallas(
     frac_bits: int,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = True,
+    points: tuple[int, ...] | None = None,
 ) -> jnp.ndarray:
     """Fused fixed-point encode + Horner share evaluation, all residues in
-    one launch.  Returns (R, num_shares, rows, 128) uint32 — the uint64
+    one launch.  Returns (R, len(points), rows, 128) uint32 — the uint64
     encoded tensor of the two-stage path never materializes.
+
+    ``points`` (default 1..num_shares) are the public evaluation points to
+    emit, statically unrolled like the full-fan-out loop — the sharded
+    ``secure_psum`` wire only ever transmits a threshold subset of slices,
+    so it evaluates only those, skipping (w - t)/w of the Horner work.
+    Slice j of the output is the share at ``points[j]`` on every path.
 
     Equivalent to ``FixedPointCodec.encode`` followed by the share kernel:
     s = round(x * 2**frac_bits) clipped to +-max_signed, lifted to residues
@@ -195,6 +203,9 @@ def shamir_encode_share_pallas(
     """
     rows, lanes = x.shape
     assert lanes == 128 and rows % block_rows == 0, "ops.py reshapes/pads"
+    if points is None:
+        points = tuple(range(1, num_shares + 1))
+    assert all(1 <= p <= num_shares for p in points)
     num_residues, t_minus_1 = coeffs.shape[0], coeffs.shape[1]
     assert len(moduli) == num_residues
     max_signed = 1
@@ -204,7 +215,7 @@ def shamir_encode_share_pallas(
     grid = (rows // block_rows,)
     kernel = functools.partial(
         _encode_share_kernel,
-        num_shares=num_shares,
+        points=points,
         moduli=moduli,
         scale=float(1 << frac_bits),
         max_signed=max_signed,
@@ -220,11 +231,11 @@ def shamir_encode_share_pallas(
             ),
         ],
         out_specs=pl.BlockSpec(
-            (num_residues, num_shares, block_rows, 128),
+            (num_residues, len(points), block_rows, 128),
             lambda i: (0, 0, i, 0),
         ),
         out_shape=jax.ShapeDtypeStruct(
-            (num_residues, num_shares, rows, 128), jnp.uint32
+            (num_residues, len(points), rows, 128), jnp.uint32
         ),
         interpret=interpret,
     )(x, coeffs)

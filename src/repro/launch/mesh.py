@@ -19,7 +19,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     pod); "model" carries TP/EP/sequence-sharded KV.
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    from ..distributed.sharding import POD_AXIS
+
+    axes = (POD_AXIS, "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes)
 
 

@@ -76,6 +76,13 @@ def parse_args(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--secure-agg", default="none",
                     choices=["none", "shamir"])
+    ap.add_argument("--secure-backend", default="pallas",
+                    choices=["pallas", "reference"],
+                    help="shamir aggregation wire: 'pallas' runs the whole "
+                         "cohort round on the flat-buffer uint32 wire (one "
+                         "batched encode+share launch, one exact uint64 "
+                         "reduction, t-subset reveal); 'reference' keeps "
+                         "the per-leaf uint64 oracle loop")
     ap.add_argument("--institutions", type=int, default=4,
                     help="batch splits treated as paper institutions")
     ap.add_argument("--compress", action="store_true",
@@ -250,7 +257,8 @@ def run_lm(args) -> dict:
     )
     opt_state = adamw_init(params)
     S = max(1, args.institutions)
-    agg = SecureAggregator() if args.secure_agg == "shamir" else None
+    agg = SecureAggregator(backend=args.secure_backend) \
+        if args.secure_agg == "shamir" else None
     err_fb = init_error_feedback(params) if args.compress else None
 
     B, L = args.batch, args.seq_len
@@ -349,14 +357,29 @@ def run_lm(args) -> dict:
         # cross-institution aggregation (paper's centralized phase)
         if agg is not None:
             key, kk = jax.random.split(key)
-            protected = [
-                agg.protect(jax.random.fold_in(kk, j), g)
-                for j, g in zip(live_idx, per_inst)
-            ]
-            summed = agg.aggregate(protected)
-            mean = agg.reveal(summed, dtype=jnp.float32)
+            if agg.backend == "pallas":
+                # flat-buffer wire: the live cohort's grad trees stack
+                # S-leading and the whole round is one batched
+                # encode+share launch -> exact uint64 reduction over the
+                # institution axis -> one t-subset reveal (the same round
+                # helper the fused protocol drivers run); per-institution
+                # gradients only ever exist as shares past this point
+                stacked = jax.tree_util.tree_map(
+                    lambda *gs: jnp.stack(gs, axis=0), *per_inst
+                )
+                summed = agg.secure_round_batched(
+                    kk, stacked, dtype=jnp.float32
+                )
+            else:
+                # per-leaf uint64 oracle loop (debug/audit rung)
+                protected = [
+                    agg.protect(jax.random.fold_in(kk, j), g)
+                    for j, g in zip(live_idx, per_inst)
+                ]
+                summed = agg.reveal(agg.aggregate(protected),
+                                    dtype=jnp.float32)
             grads = jax.tree_util.tree_map(
-                lambda x: (x / len(live_idx)).astype(jnp.float32), mean
+                lambda x: (x / len(live_idx)).astype(jnp.float32), summed
             )
         else:
             grads = jax.tree_util.tree_map(
@@ -384,6 +407,8 @@ def run_lm(args) -> dict:
         "params": T.count_params(cfg),
         "steps": args.steps - start,
         "secure_agg": args.secure_agg,
+        "secure_backend": args.secure_backend
+        if args.secure_agg != "none" else None,
         "institutions": S,
         "loss_first": losses[0] if losses else None,
         "loss_last": losses[-1] if losses else None,

@@ -1,5 +1,7 @@
-"""Unit tests: int8 error-feedback compression, checkpoint manager,
-in-SPMD secure_psum (the multi-pod aggregation primitive)."""
+"""Unit tests: int8 error-feedback compression, checkpoint manager.
+
+(The in-SPMD secure_psum coverage moved to tests/test_secure_psum.py,
+parametrized over wire format, reveal mode and device counts.)"""
 import os
 import time
 
@@ -11,7 +13,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
 from repro.distributed.compat import shard_map
-from repro.core.secure_agg import secure_psum
 from repro.optim.compression import compressed_psum, init_error_feedback
 
 
@@ -102,20 +103,3 @@ def test_checkpoint_manager_async_writes(tmp_path, rng_key):
                                np.asarray(t["a"]))
 
 
-# ------------------------------------------------------------ secure_psum
-def test_secure_psum_exact_inside_spmd(rng_key):
-    """The in-SPMD Shamir aggregation (what the multi-pod mesh runs over
-    the 'pod' axis) reveals exactly the global sum."""
-    mesh = jax.make_mesh((1,), ("pod",))
-    tree = {"g": 0.5 * jax.random.normal(rng_key, (256,), jnp.float32),
-            "h": jnp.float32(3.25) * jnp.ones((4, 4), jnp.float32)}
-
-    out = shard_map(
-        lambda: secure_psum(tree, "pod", jax.random.PRNGKey(5)),
-        mesh=mesh, in_specs=(), out_specs=P(),
-        check_vma=False,
-    )()
-    np.testing.assert_allclose(np.asarray(out["g"]), np.asarray(tree["g"]),
-                               atol=1e-5)
-    np.testing.assert_allclose(np.asarray(out["h"]), np.asarray(tree["h"]),
-                               atol=1e-5)

@@ -165,6 +165,87 @@ def test_duplicate_reconstruction_points_rejected(rng_key):
         sch.reconstruct(shares[:2], points=[2, 2])
 
 
+def test_flat_reveal_default_is_t_subset(rng_key):
+    """points=None reconstructs from the first t slices on BOTH backends —
+    bit-identical to any explicit t-subset (exact field arithmetic)."""
+    tree = {"g": jnp.asarray([1.0, -2.0, 3.5, 0.125])}
+    for backend in ("reference", "pallas"):
+        agg = SecureAggregator(
+            scheme=ShamirScheme(threshold=2, num_shares=5, backend=backend)
+        )
+        prot = agg.protect(rng_key, tree)
+        default = agg.reveal(prot)  # all 5 slices present, no points
+        for pts in [(1, 2), (2, 4), (3, 5)]:
+            idx = jnp.asarray([p - 1 for p in pts])
+            sub = jax.tree_util.tree_map(lambda s: s[idx], prot)
+            got = agg.reveal(sub, points=pts)
+            np.testing.assert_array_equal(np.asarray(default["g"]),
+                                          np.asarray(got["g"]))
+
+
+# ------------------------------------------------------- overflow checking
+def test_encode_exact_at_capacity():
+    """Values inside capacity round-trip; check=True stays silent."""
+    codec = FixedPointCodec()
+    x = jnp.asarray([0.999999 * codec.capacity(), -0.5 * codec.capacity()])
+    out = codec.decode(codec.encode(x, check=True))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x),
+                               rtol=0, atol=1.0 / codec.scale)
+
+
+def test_encode_past_capacity_raises_with_check():
+    """Just past capacity: silent saturation by default (documented), a
+    hard OverflowError with the debug check armed."""
+    codec = FixedPointCodec()
+    x = jnp.asarray([1.001 * codec.capacity()])
+    # default path saturates: reveals the capacity bound, NOT the value
+    sat = codec.decode(codec.encode(x))
+    assert float(sat[0]) < float(x[0])
+    with pytest.raises(OverflowError, match="capacity"):
+        codec.encode(x, check=True)
+
+
+def test_protect_overflow_check_both_backends(rng_key):
+    """The protect paths wire the check to the headroom_ok contract."""
+    over = {"g": jnp.asarray([1.001 * FixedPointCodec().capacity()])}
+    ok = {"g": jnp.asarray([3.25])}
+    for backend in ("reference", "pallas"):
+        agg = SecureAggregator(backend=backend, overflow_check=True)
+        assert not agg.headroom_ok(float(over["g"][0]), 1)
+        agg.protect(rng_key, ok)  # in capacity: silent
+        with pytest.raises(OverflowError, match="capacity"):
+            agg.protect(rng_key, over)
+
+
+def test_protect_batched_overflow_check(rng_key):
+    agg = SecureAggregator(backend="pallas", overflow_check=True)
+    cap = agg.codec.capacity()
+    bad = {"g": jnp.asarray([[0.5], [1.001 * cap]])}  # one bad institution
+    with pytest.raises(OverflowError, match="capacity"):
+        agg.protect_batched(rng_key, bad)
+    # each slice inside capacity but the AGGREGATE would overflow: the
+    # batched bound is capacity / S (the headroom_ok contract), so this
+    # is caught at protect time instead of revealing a wrong float
+    agg_over = {"g": jnp.asarray([[0.6 * cap], [0.6 * cap]])}
+    assert not agg.headroom_ok(0.6 * cap, 2)
+    with pytest.raises(OverflowError, match="capacity"):
+        agg.protect_batched(rng_key, agg_over)
+
+
+def test_reveal_default_below_threshold_raises(rng_key):
+    """points=None on a short share stack: the informative below-threshold
+    error on BOTH backends, not a point-count mismatch."""
+    tree = {"g": jnp.asarray([1.0, -2.0])}
+    for backend in ("reference", "pallas"):
+        agg = SecureAggregator(
+            scheme=ShamirScheme(threshold=3, num_shares=5, backend=backend)
+        )
+        prot = agg.protect(rng_key, tree)
+        short = jax.tree_util.tree_map(lambda s: s[:2], prot)
+        with pytest.raises(ValueError, match="irrecoverable"):
+            agg.reveal(short)
+
+
 def test_backend_override_rebuilds_scheme():
     agg = SecureAggregator(backend="pallas")
     assert agg.scheme.backend == "pallas"
