@@ -1,0 +1,291 @@
+"""Fault-tolerance tax: supervised vs bare secure rounds + recovery latency.
+
+Three question the supervisor PR must answer with numbers:
+
+* ``supervision overhead`` — what does routing every fused coordinator
+  round through ``RoundSupervisor`` (SimClock + HeartbeatMonitor beats +
+  quorum/threshold preflight + telemetry stamping) cost when NOTHING
+  fails?  The control plane is pure Python around one jitted round, so
+  the acceptance gate is <= 2% per-round overhead at the full config —
+  and the fault-free supervised beta must be BIT-identical to the bare
+  run (supervision must not perturb the protocol).
+* ``overflow_check overhead`` — the debug-mode fixed-point overflow
+  assert (``SecureAggregator(overflow_check=True)``) rides a
+  ``jax.debug.callback`` on every protect dispatch.  The cost is a
+  FIXED per-round host callback (one ``protect_batched`` per fused
+  round) — typically 1-3 ms, with multi-ms jitter from host-callback
+  latency under load — so the row reports the absolute per-round cost
+  and gates the arm-by-default recommendation (informationally) on
+  <= 3.3 ms: 2% of the production fused round
+  (BENCH_e2e_secure_fit full config: 165-465 ms/round).  At this
+  benchmark's smaller rounds the same absolute cost reads as a much
+  larger relative percent; the absolute number is the invariant one.
+  Within the gate it is cheap enough to arm by default in the examples
+  and the launch driver's secure paths (the alternative — silent
+  saturation revealing a plausible-but-wrong aggregate — is the worst
+  failure mode the protocol has).
+* ``recovery latency`` — for three canned survivable chaos schedules
+  (quorum-loss flap burst, center death between protect and reveal,
+  loss of both spare centers), how many retries / how much simulated
+  backoff / how many extra wall-clock seconds does the study pay, and
+  does it still land on the fault-free oracle beta?  Center-fault rows
+  must match the oracle EXACTLY (reveals are independent of the sharing
+  randomness and of which >= t points reconstruct); institution-fault
+  rows must match within fixed-point quantization.
+
+Timing: untimed warmups trigger all trace/compile work and the
+one-per-study partition packing (globally LRU-cached, so
+bare/supervised/chaos runs all hit the same cache); the fault-free
+variants then run INTERLEAVED and each overhead is the median of
+per-repeat pairwise ratios, so shared-CPU timer drift cancels instead
+of reading as fake overhead (see the comment in ``run``).
+Machine-readable rows land in BENCH_fault_overhead.json (``--quick`` is
+the bench_smoke gate size and writes BENCH_fault_overhead_smoke.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Institution, SecureAggregator, StudyCoordinator
+from repro.data import generate_synthetic
+from repro.runtime import FailureInjector, FaultPolicy, RoundSupervisor
+
+
+def _make_parts(seed: int, s: int, per_inst: int, d: int):
+    study = generate_synthetic(
+        jax.random.PRNGKey(seed), num_institutions=s,
+        records_per_institution=per_inst, dim=d,
+    )
+    return list(study.parts)
+
+
+def _make_coord(parts, agg, *, lam=1.0, protect="both", seed=0):
+    insts = [Institution(f"i{j}", Xj, yj)
+             for j, (Xj, yj) in enumerate(parts)]
+    return StudyCoordinator(insts, lam=lam, protect=protect,
+                            aggregator=agg, seed=seed, fused=True)
+
+
+def _policy():
+    # the benchmark's fixed control-plane knobs: deterministic, and the
+    # flap schedule below is tuned so its parties heal under exactly this
+    # backoff ladder (1 + 2 simulated seconds across two retries)
+    return FaultPolicy(max_retries=4, backoff_base=1.0, backoff_factor=2.0,
+                       round_seconds=1.0, heartbeat_timeout=5.0,
+                       reprovision_after=1)
+
+
+def _run_bare(parts, agg, repeats):
+    best, coord = 1e30, None
+    for _ in range(repeats):
+        coord = _make_coord(parts, agg)
+        t0 = time.perf_counter()
+        while not coord.converged and coord.iteration < 60:
+            coord.step()
+        best = min(best, time.perf_counter() - t0)
+    return best, coord
+
+
+def _run_supervised(parts, agg, repeats, schedule=None):
+    best, coord, sup = 1e30, None, None
+    for _ in range(repeats):
+        coord = _make_coord(parts, agg)
+        sup = RoundSupervisor(coord, policy=_policy(),
+                              injector=FailureInjector(schedule or {}))
+        t0 = time.perf_counter()
+        sup.run(max_rounds=60)
+        best = min(best, time.perf_counter() - t0)
+    return best, coord, sup
+
+
+def run(num_institutions: int = 4, dim: int = 64, records: int = 80_000,
+        repeats: int = 3, seed: int = 0, full_gate: bool = True):
+    parts = _make_parts(seed, num_institutions, records // num_institutions,
+                        dim)
+    agg = SecureAggregator(backend="pallas")
+    quant_tol = (num_institutions + 1) / agg.codec.scale
+    rows = []
+
+    # ---- supervision + overflow_check overhead (fault-free) ----------------
+    # Measurement protocol: this container's shared-CPU timer drifts by
+    # several percent over a benchmark run, which back-to-back timing
+    # blocks absorb as fake overhead (and a 2% gate cannot survive).
+    # So the three fault-free variants run INTERLEAVED — a min-of-2
+    # sample of each per repeat, order flipped every repeat — and the
+    # overheads are the MEDIAN of the per-repeat pairwise ratios, which
+    # cancels drift (each ratio compares runs taken seconds apart) and
+    # sheds outlier repeats.
+    agg_chk = SecureAggregator(backend="pallas", overflow_check=True)
+    _run_bare(parts, agg, 1)      # warmup: trace + compile + packing
+    _run_supervised(parts, agg, 1)
+    _run_bare(parts, agg_chk, 1)  # warmup the checked protect graph
+    bare_rt, sup_rt, chk_rt, bare_tot, sup_tot = [], [], [], [], []
+    bare = sup_c = chk = None
+    for rep in range(repeats):
+        # each sample is min-of-2 study runs; the variant order flips
+        # every repeat so slow drift biases no variant systematically
+        order = "bsc" if rep % 2 == 0 else "csb"
+        for which in order:
+            if which == "b":
+                (s1, bare), (s2, _) = (_run_bare(parts, agg, 1),
+                                       _run_bare(parts, agg, 1))
+                bare_rt.append(min(s1, s2) / bare.iteration)
+                bare_tot.append(min(s1, s2))
+            elif which == "s":
+                (s1, sup_c, sup), (s2, _, _) = (
+                    _run_supervised(parts, agg, 1),
+                    _run_supervised(parts, agg, 1))
+                sup_rt.append(min(s1, s2) / sup_c.iteration)
+                sup_tot.append(min(s1, s2))
+            else:
+                (s1, chk), (s2, _) = (_run_bare(parts, agg_chk, 1),
+                                      _run_bare(parts, agg_chk, 1))
+                chk_rt.append(min(s1, s2) / chk.iteration)
+    bare_s, sup_s = min(bare_tot), min(sup_tot)
+    oracle = np.asarray(bare.beta)
+    for name, secs, rt, coord in (
+            ("bare_fused_coordinator", bare_s, bare_rt, bare),
+            ("supervised_fused_coordinator", sup_s, sup_rt, sup_c)):
+        rows.append({
+            "path": name,
+            "institutions": num_institutions, "dim": dim, "records": records,
+            "seconds": secs,
+            "seconds_per_round": min(rt),
+            "rounds": coord.iteration,
+            "converged": bool(coord.converged),
+        })
+    overhead_pct = (float(np.median(
+        [s / b for s, b in zip(sup_rt, bare_rt)]
+    )) - 1.0) * 100.0
+    sup_err = float(np.abs(np.asarray(sup_c.beta) - oracle).max())
+    # the acceptance gate: <= 2% at the full config; the quick config's
+    # rounds are small enough that timer noise dominates even the
+    # interleaved medians, so it only excludes gross regressions
+    gate = 2.0 if full_gate else 10.0
+    rows.append({
+        "check": "supervision overhead fault-free",
+        "seconds_per_round_bare": min(bare_rt),
+        "seconds_per_round_supervised": min(sup_rt),
+        "overhead_pct": overhead_pct,
+        "gate_pct": gate,
+        "beta_err_vs_bare": sup_err,
+        "beta_bit_identical": sup_err == 0.0,
+        "pass": overhead_pct <= gate and sup_err == 0.0,
+    })
+
+    chk_err = float(np.abs(np.asarray(chk.beta) - oracle).max())
+    chk_pct = (float(np.median(
+        [c / b for c, b in zip(chk_rt, bare_rt)]
+    )) - 1.0) * 100.0
+    chk_ms = float(np.median(
+        [(c - b) for c, b in zip(chk_rt, bare_rt)]
+    )) * 1e3
+    rows.append({
+        "check": "overflow_check callback overhead",
+        "seconds_per_round_unchecked": min(bare_rt),
+        "seconds_per_round_checked": min(chk_rt),
+        "overhead_pct": chk_pct,
+        "overhead_ms_per_round": chk_ms,
+        "beta_err_vs_unchecked": chk_err,
+        # the arm-by-default recommendation (examples + launch secure
+        # paths) holds while the fixed per-round callback cost stays
+        # within 2% of the production fused round (~165 ms -> 3.3 ms)
+        "within_arm_threshold": chk_ms <= 3.3,
+        "pass": chk_err == 0.0,
+    })
+
+    # ---- recovery latency under canned survivable schedules ----------------
+    # (t=2, w=3 throughout; schedule keys are ROUND numbers)
+    schedules = {
+        # 3 of 4 institutions flap together at round 2: quorum collapses
+        # to 1/4 responding, the supervisor backs off 1 + 2 simulated
+        # seconds while the flaps self-heal at t+3.0, then the full
+        # cohort resumes -> oracle beta within quantization
+        "flap_quorum_retry": {
+            2: [("flap", "i1", 3.0), ("flap", "i2", 3.0),
+                ("flap", "i3", 3.0)],
+        },
+        # both non-primary centers die BETWEEN protect and reveal: the
+        # surviving single point < t, the round aborts (reveals nothing),
+        # dead points are re-provisioned and the retry re-shares with
+        # fresh polynomials -> bit-identical to the oracle
+        "midround_abort_reshare": {
+            2: [("center_midround", 2), ("center_midround", 3)],
+        },
+        # two centers crash cleanly before round 2: preflight fails
+        # (1 < t), re-provisioning replaces them and the round proceeds
+        # -> bit-identical to the oracle
+        "center_loss_reprovision": {
+            2: [("center_crash", 2), ("center_crash", 3)],
+        },
+    }
+    center_only = {"midround_abort_reshare", "center_loss_reprovision"}
+    for name, schedule in schedules.items():
+        secs, coord, sup = _run_supervised(parts, agg, repeats, schedule)
+        err = float(np.abs(np.asarray(coord.beta) - oracle).max())
+        aborted = sum(r.aborted_attempts for r in sup.rounds)
+        degraded = sum(1 for r in sup.rounds if r.degraded)
+        tol = 0.0 if name in center_only else quant_tol
+        rows.append({
+            "schedule": name,
+            "seconds": secs,
+            "recovery_wall_seconds": secs - bare_s,
+            "rounds": coord.iteration,
+            "extra_rounds": coord.iteration - bare.iteration,
+            "retries": sup.total_retries,
+            "aborted_attempts": aborted,
+            "degraded_rounds": degraded,
+            "sim_backoff_seconds": sup.total_backoff,
+            "converged": bool(coord.converged),
+            "max_abs_err_vs_oracle": err,
+            "oracle_tol": tol,
+            "pass": bool(coord.converged) and err <= tol,
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--institutions", type=int, default=4)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--records", type=int, default=80_000,
+                    help="total N across all institutions")
+    ap.add_argument("--repeats", type=int, default=7)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="small config for the bench_smoke gate "
+                         "(S=4, d=32, N=20000, 1 repeat; the 2% overhead "
+                         "gate applies to the full config only)")
+    ap.add_argument("--json", default=None,
+                    help="machine-readable output path ('' to skip; "
+                         "default BENCH_fault_overhead[_smoke].json)")
+    args = ap.parse_args(argv)
+
+    kw = dict(num_institutions=args.institutions, dim=args.dim,
+              records=args.records, repeats=args.repeats, seed=args.seed)
+    if args.quick:
+        kw.update(num_institutions=4, dim=32, records=20_000, repeats=3)
+    rows = run(full_gate=not args.quick, **kw)
+    rows.append({"config": "quick" if args.quick else "full", **{
+        k: kw[k] for k in ("num_institutions", "dim", "records")
+    }})
+
+    out = json.dumps(rows, indent=2)
+    print(out)
+    path = args.json
+    if path is None:
+        path = ("BENCH_fault_overhead_smoke.json" if args.quick
+                else "BENCH_fault_overhead.json")
+    if path:
+        with open(path, "w") as f:
+            f.write(out + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

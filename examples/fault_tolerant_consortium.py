@@ -1,17 +1,28 @@
 """A research consortium surviving stragglers, center loss and churn.
 
-Demonstrates the deployment-shaped protocol (core.protocol): 8 institutions
-and 3 Computation Centers run Algorithm 1 while
-  * institution 7 is a straggler (misses the round deadline),
-  * Computation Center 2 goes down mid-study (t-of-w Shamir absorbs it:
-    the fused round reveals from the surviving centers' actual points),
-  * a new institution joins between Newton iterations (elastic membership;
-    the cohort repacks, the LRU pack cache keeps both cohorts resident),
-and the study still converges, with a per-round audit trail.  The whole
-thing runs on the FUSED cohort-level round (``fused=True``): each round is
-one jitted graph — batched summaries, one encode+share launch, one uint64
-reduction, reveal, Newton step — with per-round parity to the
-per-institution loop within fixed-point quantization.
+Demonstrates the supervised protocol: a ``RoundSupervisor`` drives the
+deployment-shaped ``StudyCoordinator`` (fused cohort rounds) through a
+deterministic ``FailureInjector`` chaos schedule while
+
+  * hospital-7 is a chronic straggler (always misses the round deadline),
+  * hospital-3 flaps for 2.5 simulated seconds at round 3 (stops
+    heartbeating, self-heals, rejoins without losing its data),
+  * Computation Center 2 dies BETWEEN protect and reveal at round 2
+    (2-of-4 Shamir absorbs it: the survivors' points reconstruct the
+    identical aggregate; nothing is re-run),
+  * a replacement center is provisioned at round 5 on the consortium's
+    SPARE evaluation point 4 — a point whose share slice the dead node
+    never held — restoring full redundancy,
+  * a new institution joins between Newton iterations (elastic
+    membership: the supervisor admits it into the heartbeat fleet, the
+    cohort repacks, the LRU pack cache keeps both cohorts resident),
+
+and the study still converges to the responding cohort's centralized
+beta, with a per-round ``SupervisedRound`` audit trail (retries, backoff,
+degraded flags, suspected-dead lists).  The whole thing runs on the
+FUSED cohort-level round: one jitted graph per attempt, with the
+fixed-point overflow assert armed (``overflow_check=True`` — a value
+past headroom raises instead of saturating into a plausible reveal).
 
   PYTHONPATH=src python examples/fault_tolerant_consortium.py
 """
@@ -25,7 +36,9 @@ import numpy as np
 from repro.core.newton import centralized_fit
 from repro.core.protocol import Institution, StudyCoordinator
 from repro.core.secure_agg import SecureAggregator
+from repro.core.shamir import ShamirScheme
 from repro.data.synthetic import generate_synthetic
+from repro.runtime import FailureInjector, FaultPolicy, RoundSupervisor
 
 study = generate_synthetic(
     jax.random.PRNGKey(3), num_institutions=9,
@@ -37,34 +50,70 @@ insts = [Institution(f"hospital-{j}", X, y, latency=0.5)
          for j, (X, y) in enumerate(parts[:8])]
 insts[7].latency = 99.0  # chronic straggler: always misses the deadline
 
-coord = StudyCoordinator(insts, lam=1.0, protect="gradient",
-                         deadline=2.0, min_responders=4,
-                         aggregator=SecureAggregator(backend="pallas"),
-                         fused=True)
+# 2-of-4 Shamir with only 3 centers stood up: evaluation point 4 is the
+# consortium's spare, held back for re-provisioning after a center loss
+coord = StudyCoordinator(
+    insts, lam=1.0, protect="gradient",
+    deadline=2.0, min_responders=4, num_centers=3,
+    aggregator=SecureAggregator(
+        scheme=ShamirScheme(threshold=2, num_shares=4, backend="pallas"),
+        overflow_check=True,
+    ),
+    fused=True,
+)
 
-for round_no in range(1, 30):
+schedule = {
+    2: [("center_midround", 2)],        # dies between protect and reveal
+    3: [("flap", "hospital-3", 2.5)],   # transient outage, self-heals
+    5: [("provision_center", 4)],       # replacement at the spare point
+}
+sup = RoundSupervisor(
+    coord,
+    policy=FaultPolicy(max_retries=3, round_seconds=1.0,
+                       heartbeat_timeout=5.0, reprovision_after=0),
+    injector=FailureInjector(schedule),
+)
+
+for _ in range(30):
     if coord.converged:
         break
-    if round_no == 2:
-        coord.centers[1].online = False  # lose a Computation Center
-        print(">> center 2 DOWN (Shamir 2-of-3: study continues)")
-    if round_no == 3:
+    if sup.round_no + 1 == 4:
         X9, y9 = parts[8]
-        coord.add_institution(Institution("hospital-8(new)", X9, y9))
+        coord.add_institution(
+            Institution("hospital-8(new)", X9, y9, latency=0.5)
+        )
         print(">> hospital-8 JOINED mid-study")
-    rep = coord.step()
-    print(f"round {rep.iteration:2d}: obj={rep.objective:.6f} "
+    rec = sup.step()
+    rep = rec.report
+    flags = []
+    if rec.events:
+        flags.append("events=" + ",".join(e[0] for e in rec.events))
+    if rec.retries:
+        flags.append(f"retries={rec.retries} "
+                     f"backoff={rec.backoff_seconds:.0f}s")
+    if rec.suspected_dead:
+        flags.append(f"suspected_dead={rec.suspected_dead}")
+    print(f"round {rec.round_no:2d}: obj={rep.objective:.6f} "
           f"responders={len(rep.responders)} stragglers={rep.stragglers} "
-          f"centers={rep.centers_used}")
+          f"centers={rep.centers_used} "
+          f"degraded={'Y' if rec.degraded else 'n'}"
+          + (" | " + " ".join(flags) if flags else ""))
 
 beta = np.asarray(coord.beta)
-# the final cohort = hospitals 0-6 + hospital-8 (7 never responds)
+# the final cohort = hospitals 0-6 + hospital-8 (7 never responds; 3's
+# flap healed before convergence, so its data is fully represented)
 cohort_parts = parts[:7] + [parts[8]]
 X = np.concatenate([p[0] for p in cohort_parts])
 y = np.concatenate([p[1] for p in cohort_parts])
 gold = centralized_fit(X, y, lam=1.0)
 r2 = float(np.corrcoef(beta, gold.beta)[0, 1] ** 2)
-print(f"\nconverged={coord.converged} after {coord.iteration} rounds")
+degraded = sum(1 for r in sup.rounds if r.degraded)
+print(f"\nconverged={coord.converged} after {coord.iteration} rounds "
+      f"({degraded} degraded, {sup.total_retries} retries, "
+      f"{sup.total_backoff:.0f}s simulated backoff)")
+print(f"centers now at points "
+      f"{sorted(c.index for c in coord.centers if c.online)} "
+      f"(spare point 4 in service)")
 print(f"R^2 vs centralized-fit-on-responding-cohort = {r2:.8f}")
 assert coord.converged and r2 > 0.999
 print("OK")

@@ -26,7 +26,12 @@ study = generate_synthetic(
 
 # 2. Secure fit: summaries are Shamir-shared 2-of-3 across Computation
 #    Centers; only the *global* aggregates are ever reconstructed.
-agg = SecureAggregator(scheme=ShamirScheme(threshold=2, num_shares=3))
+#    overflow_check arms the fixed-point headroom assert on every protect
+#    (a ~1-3 ms/round callback; see benchmarks/fault_overhead.py): a
+#    value past capacity raises instead of saturating into a
+#    plausible-but-wrong reveal.
+agg = SecureAggregator(scheme=ShamirScheme(threshold=2, num_shares=3),
+                       overflow_check=True)
 secure = secure_fit(list(study.parts), lam=1.0, protect="gradient",
                     aggregator=agg)
 

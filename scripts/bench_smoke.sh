@@ -7,12 +7,15 @@
 # runs the e2e fused-Newton smoke (--quick) and asserts secure ==
 # centralized beta (R^2 = 1) and fused == pre-fusion-loop beta within
 # fixed-point quantization, the secure_psum smoke (sharded flat wire
-# payload <= 0.55x the per-leaf uint64 tree, bit-equal reveals), and the
-# lambda-path smoke.  Run this before merging anything that touches
-# src/repro/core or src/repro/kernels.
+# payload <= 0.55x the per-leaf uint64 tree, bit-equal reveals), the
+# lambda-path smoke, and the fault-overhead smoke (supervised rounds at
+# negligible overhead + three chaos schedules recovering to the
+# fault-free oracle).  Run this before merging anything that touches
+# src/repro/core, src/repro/kernels or src/repro/runtime.
 #
 # BENCH_FULL=1 additionally refreshes BENCH_e2e_secure_fit.json at the
-# full acceptance config (S=8, d=128, N=2e5; several minutes).
+# full acceptance config (S=8, d=128, N=2e5; several minutes) and
+# BENCH_fault_overhead.json (supervision <= 2%/round gate).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -142,6 +145,45 @@ if failures:
 print("lambda-path smoke OK")
 EOF
 
+echo "== fault-overhead smoke (supervised rounds + chaos recovery) =="
+python benchmarks/fault_overhead.py --quick >/dev/null
+
+python - <<'EOF'
+import json, sys
+
+rows = json.load(open("BENCH_fault_overhead_smoke.json"))
+failures = []
+saw_sup, saw_sched = False, 0
+for r in rows:
+    if r.get("check") == "supervision overhead fault-free":
+        saw_sup = True
+        print(f"supervision overhead: {r['overhead_pct']:+.2f}%/round "
+              f"(gate {r['gate_pct']:.0f}%, beta err "
+              f"{r['beta_err_vs_bare']:.3g})")
+        if not r["pass"]:
+            failures.append(f"supervision overhead gate failed: {r}")
+    if r.get("check") == "overflow_check callback overhead":
+        print(f"overflow_check: {r['overhead_ms_per_round']:.2f}ms/round "
+              f"({r['overhead_pct']:+.1f}% at smoke scale)")
+        if not r["pass"]:
+            failures.append(f"overflow_check perturbed the beta: {r}")
+    if "schedule" in r:
+        saw_sched += 1
+        print(f"chaos {r['schedule']}: {r['retries']} retries, "
+              f"{r['sim_backoff_seconds']:.0f}s backoff, "
+              f"err {r['max_abs_err_vs_oracle']:.3g}")
+        if not r["pass"]:
+            failures.append(f"chaos schedule missed the oracle: {r}")
+if not saw_sup:
+    failures.append("supervision overhead row missing from fault smoke")
+if saw_sched < 3:
+    failures.append("chaos recovery rows missing from fault smoke")
+if failures:
+    print("\n".join("FAIL: " + f for f in failures))
+    sys.exit(1)
+print("fault-overhead smoke OK")
+EOF
+
 if [[ "${BENCH_FULL:-0}" == "1" ]]; then
     echo "== e2e secure fit FULL (refreshes BENCH_e2e_secure_fit.json) =="
     python benchmarks/e2e_secure_fit.py >/dev/null
@@ -197,5 +239,30 @@ if bad:
     print(f"FAIL: full lambda-path gate (>= 3x + parity): {bad}")
     sys.exit(1)
 print(f"full lambda-path gate OK ({gate[0]['speedup']:.2f}x)")
+EOF
+    echo "== fault-overhead FULL (refreshes BENCH_fault_overhead.json) =="
+    python benchmarks/fault_overhead.py >/dev/null
+    python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_fault_overhead.json"))
+bad = [r for r in rows if ("check" in r or "schedule" in r)
+       and not r["pass"]]
+sup = [r for r in rows if r.get("check") == "supervision overhead fault-free"]
+sched = [r for r in rows if "schedule" in r]
+if not sup:
+    print("FAIL: supervision row missing from BENCH_fault_overhead.json")
+    sys.exit(1)
+if len(sched) < 3:
+    print("FAIL: recovery-latency rows missing from BENCH_fault_overhead.json")
+    sys.exit(1)
+if bad:
+    # the acceptance gate: fault-free supervision <= 2%/round at the
+    # full config, bit-identical beta, and every canned chaos schedule
+    # recovering to the fault-free oracle
+    print(f"FAIL: full fault-overhead gate: {bad}")
+    sys.exit(1)
+print(f"full fault-overhead gate OK "
+      f"(supervision {sup[0]['overhead_pct']:+.2f}%/round, "
+      f"{len(sched)} recovery schedules at oracle parity)")
 EOF
 fi

@@ -23,7 +23,13 @@ from .secure_agg import (
     secure_scale_by_public,
 )
 from .logreg import LocalSummaries, local_summaries, predict_proba, deviance
-from .newton import FitResult, centralized_fit, newton_step, secure_fit
+from .newton import (
+    FitResult,
+    SecureFitDriver,
+    centralized_fit,
+    newton_step,
+    secure_fit,
+)
 from .protocol import ComputationCenter, Institution, RoundReport, StudyCoordinator
 
 __all__ = [
@@ -36,6 +42,7 @@ __all__ = [
     "REVEAL_MODES", "SecureAggregator", "check_aggregation_headroom",
     "secure_add", "secure_psum", "secure_scale_by_public",
     "LocalSummaries", "local_summaries", "predict_proba", "deviance",
-    "FitResult", "centralized_fit", "newton_step", "secure_fit",
+    "FitResult", "SecureFitDriver", "centralized_fit", "newton_step",
+    "secure_fit",
     "ComputationCenter", "Institution", "RoundReport", "StudyCoordinator",
 ]

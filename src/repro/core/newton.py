@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,9 +42,9 @@ from .flatbuf import LANES, ROW_ALIGN, _rows_for
 from .logreg import LocalSummaries, local_summaries, deviance
 from .secure_agg import SecureAggregator
 
-__all__ = ["FitResult", "newton_step", "prox_newton_step",
-           "centralized_fit", "secure_fit", "regularized_objective",
-           "stop_threshold", "should_stop"]
+__all__ = ["FitResult", "RoundReport", "newton_step", "prox_newton_step",
+           "centralized_fit", "secure_fit", "SecureFitDriver",
+           "regularized_objective", "stop_threshold", "should_stop"]
 
 PROTECT_CHOICES = ("none", "gradient", "hessian", "both")
 
@@ -103,6 +103,29 @@ class FitResult:
     central_seconds: float = 0.0
     total_seconds: float = 0.0
     bytes_transmitted: int = 0
+
+
+@dataclasses.dataclass
+class RoundReport:
+    """One secure round's audit record, shared by every driver.
+
+    The first six fields are the per-round protocol telemetry; the
+    trailing fault-supervision fields are filled in by
+    ``runtime.supervisor.RoundSupervisor`` — an unsupervised round
+    reports the fault-free defaults (no retries, no backoff, not
+    degraded).
+    """
+
+    iteration: int
+    responders: list
+    stragglers: list
+    centers_used: list
+    objective: float
+    bytes_transmitted: int
+    retries: int = 0
+    backoff_seconds: float = 0.0
+    aborted_attempts: int = 0
+    degraded: bool = False
 
 
 def newton_step(
@@ -323,53 +346,349 @@ def _fused_secure_iteration(beta, key, X, X32, y, counts, lam,
     return beta_new, obj
 
 
-def _secure_fit_fused(parts, lam, tol, max_iter, protect, agg, seed, l1):
-    """Fused driver: pack once, then one dispatch + one sync per iteration.
+class SecureFitDriver:
+    """Stepwise Algorithm 1 with membership, liveness and crash-resume.
 
-    X keeps the float64 payload: at protocol scale the f32-storage
-    variant (``pack_partitions(..., dtype=jnp.float32)``, the TPU
-    layout) lands right AT the fixed-point quantization boundary against
-    the f64 loop path (measured ~1.1x the (S+1)/scale tolerance at
-    S=8, N=2e5), while costing the same wall-clock here — the f64 gemvs
-    are bandwidth-bound either way.  On real TPU hardware f32 storage is
-    the only option and the relaxed parity contract applies.
+    ``secure_fit`` packs the whole fit into one call; this driver exposes
+    the same computation round by round with the fault surface the
+    deployment-shaped ``protocol.StudyCoordinator`` already has, so the
+    ``runtime.supervisor.RoundSupervisor`` can drive all three secure
+    drivers through one interface:
+
+    * ``step()`` — one secure Newton round over the currently-responding
+      institutions (online and under ``deadline``), revealed from the
+      live centers' evaluation points.  An unrunnable round (fewer than
+      ``min_responders`` institutions, fewer than t live centers) raises
+      ``RuntimeError`` and leaves the fit state untouched, so a failed
+      round can be retried or resumed cleanly.
+    * ``state_dict()``/``load_state_dict()`` — a resumed driver replays
+      BIT-identically (same rng stream, same trace floats) against an
+      uninterrupted run: the coordinator-crash story.
+    * liveness hooks — ``set_online``/``set_latency`` per institution
+      name, ``set_center_online`` per evaluation point, and
+      ``_midround_hooks`` (one-shot callables fired between protect and
+      reveal) for center death inside a round: if >= t centers survive
+      the round reveals from the survivors (bit-identical — any t-subset
+      reconstructs exactly); below t it aborts with ``RuntimeError`` and
+      the retry re-shares with fresh polynomials.
+
+    A driver with every institution online, zero latencies and all
+    centers live executes the exact ``secure_fit`` iteration sequence —
+    same rng splits, same objective floats, same byte accounting — which
+    is what lets ``secure_fit`` delegate here without disturbing its
+    pinned parity tests.
     """
-    packed = pack_partitions(parts)
-    key = jax.random.PRNGKey(seed)
-    beta = jnp.zeros((packed.dim,), dtype=jnp.float64)
-    per_iter_bytes = _iteration_bytes(
-        packed.dim, packed.num_institutions, protect, agg
-    )
-    dev_prev = np.inf
-    trace: list[float] = []
-    converged = False
-    nbytes = 0
-    it = 0
-    t_total = time.perf_counter()
-    for it in range(1, max_iter + 1):
-        key, sub = jax.random.split(key)
-        beta_new, obj = _fused_secure_iteration(
-            beta, sub, packed.X, packed.X32, packed.y, packed.counts,
-            lam, agg, protect, float(l1), agg.scheme.interpret,
+
+    def __init__(
+        self,
+        parts: Sequence[tuple[jnp.ndarray, jnp.ndarray]],
+        lam: float = 1.0,
+        tol: float = 1e-10,
+        max_iter: int = 50,
+        protect: str = "gradient",
+        aggregator: SecureAggregator | None = None,
+        seed: int = 0,
+        l1: float = 0.0,
+        fused: bool | None = None,
+        names: Sequence[str] | None = None,
+        deadline: float | None = None,
+        min_responders: int = 1,
+    ):
+        if protect not in PROTECT_CHOICES:
+            raise ValueError(f"protect must be one of {PROTECT_CHOICES}")
+        self.agg = aggregator or SecureAggregator()
+        if fused is None:
+            fused = self.agg.backend == "pallas"
+        if fused and self.agg.backend != "pallas":
+            raise ValueError(
+                "fused secure_fit requires the pallas backend (the flat "
+                "share buffers ARE its wire format); use fused=False with "
+                "backend='reference'"
+            )
+        self.fused = fused
+        self.parts = list(parts)
+        self.names = (list(names) if names is not None
+                      else [f"inst{j}" for j in range(len(self.parts))])
+        if len(self.names) != len(self.parts):
+            raise ValueError("names must match parts 1:1")
+        self.lam = lam
+        self.tol = tol
+        self.max_iter = max_iter
+        self.protect = protect
+        self.l1 = float(l1)
+        self.deadline = deadline
+        self.min_responders = min_responders
+        self.dim = self.parts[0][0].shape[1]
+        self.online = [True] * len(self.parts)
+        self.latency = [0.0] * len(self.parts)
+        self.centers_online = [True] * self.agg.scheme.num_shares
+        self._midround_hooks: list[Callable[[], None]] = []
+        self.key = jax.random.PRNGKey(seed)
+        self.beta = jnp.zeros((self.dim,), dtype=jnp.float64)
+        self.iteration = 0
+        self.trace: list[float] = []
+        self.reports: list[RoundReport] = []
+        self._obj_prev = np.inf
+        self.converged = False
+        self.central_seconds = 0.0
+        self.total_seconds = 0.0
+        self.bytes_transmitted = 0
+
+    # -- liveness hooks (names mirror the supervisor's driver interface) ----
+    def _idx(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise KeyError(f"unknown institution {name!r}") from None
+
+    def set_online(self, name: str, up: bool):
+        self.online[self._idx(name)] = bool(up)
+
+    def set_latency(self, name: str, latency: float):
+        self.latency[self._idx(name)] = float(latency)
+
+    def get_latency(self, name: str) -> float:
+        return self.latency[self._idx(name)]
+
+    def set_center_online(self, index: int, up: bool):
+        if not (1 <= index <= len(self.centers_online)):
+            raise ValueError(f"no center at evaluation point {index}")
+        self.centers_online[index - 1] = bool(up)
+
+    def cohort_indices(self) -> list[int]:
+        """Current-round responders: online and under the deadline."""
+        ok = [
+            j for j in range(len(self.parts))
+            if self.online[j]
+            and (self.deadline is None or self.latency[j] <= self.deadline)
+        ]
+        if len(ok) < self.min_responders:
+            raise RuntimeError(
+                f"only {len(ok)} responders < min {self.min_responders}"
+            )
+        return ok
+
+    def live_points(self) -> tuple[int, ...] | None:
+        """Live centers' evaluation points (None when nothing is shared)."""
+        if self.protect == "none":
+            return None
+        pts = tuple(
+            i + 1 for i, up in enumerate(self.centers_online) if up
         )
-        obj = float(obj)  # the one host sync per iteration
-        trace.append(obj)
-        nbytes += per_iter_bytes
-        if bool(should_stop(dev_prev, obj, tol, len(parts),
-                            agg.codec.scale)):
-            converged = True
-            break
-        dev_prev = obj
-        beta = beta_new
-    total_s = time.perf_counter() - t_total
-    # central_seconds is not separable here: institution and center phases
-    # live in one fused graph (the split remains observable on the loop
-    # path and in protocol.StudyCoordinator).
-    return FitResult(
-        np.asarray(beta), it, converged, trace,
-        central_seconds=0.0, total_seconds=total_s,
-        bytes_transmitted=nbytes,
-    )
+        t = self.agg.scheme.threshold
+        if len(pts) < t:
+            raise RuntimeError(
+                f"{len(pts)} centers < threshold {t}; "
+                "aggregate unrecoverable this round"
+            )
+        return pts
+
+    def _post_protect_points(self, points):
+        """Re-check center liveness between protect and reveal.
+
+        Fires the one-shot mid-round hooks (the chaos harness's
+        center-death-inside-a-round events), then re-derives the reveal
+        points from whoever is STILL online: >= t survivors reveal
+        bit-identically; below t raises and the round aborts — the retry
+        re-shares against fresh polynomials, so nothing about the aborted
+        round's secrets is ever reconstructable.
+        """
+        hooks, self._midround_hooks = self._midround_hooks, []
+        for h in hooks:
+            h()
+        if points is None:
+            return None
+        return self.live_points()
+
+    # -- one Newton round ---------------------------------------------------
+    def step(self) -> RoundReport:
+        # validate the round BEFORE mutating any fit state: a failed round
+        # must leave iteration/trace/beta untouched (rng advances only once
+        # shares have actually been cut)
+        cohort = self.cohort_indices()
+        points = self.live_points()
+        parts = [self.parts[j] for j in cohort]
+        in_cohort = set(cohort)
+        stragglers = [
+            self.names[j] for j in range(len(self.parts))
+            if self.online[j] and j not in in_cohort
+        ]
+        num_live = None if points is None else len(points)
+        nbytes = _iteration_bytes(
+            self.dim, len(parts), self.protect, self.agg,
+            num_live_centers=num_live,
+        )
+        if self.fused:
+            obj, make_beta_new = self._round_fused(parts, points)
+        else:
+            obj, make_beta_new = self._round_loop(parts, points)
+        # ---- the round is known-good: mutate state (mirrors
+        #      StudyCoordinator._finish_round)
+        self.iteration += 1
+        self.trace.append(obj)
+        self.bytes_transmitted += nbytes
+        if bool(should_stop(self._obj_prev, obj, self.tol, len(parts),
+                            self.agg.codec.scale)):
+            self.converged = True
+        else:
+            self._obj_prev = obj
+            self.beta = make_beta_new()
+        report = RoundReport(
+            self.iteration,
+            [self.names[j] for j in cohort],
+            stragglers,
+            list(points or ()),
+            obj,
+            nbytes,
+        )
+        self.reports.append(report)
+        return report
+
+    def _round_loop(self, parts, points):
+        """The per-institution oracle walk (Algorithm 1 steps 3-16)."""
+        locals_: list[LocalSummaries] = [
+            local_summaries(self.beta, Xj, yj) for Xj, yj in parts
+        ]
+        protected, plain = [], []
+        for s in locals_:
+            tree = _protected_tree(self.protect, s.hessian, s.gradient,
+                                   s.deviance)
+            self.key, sub = jax.random.split(self.key)
+            protected.append(self.agg.protect(sub, tree) if tree else {})
+            plain.append(
+                {
+                    k: v
+                    for k, v in s._asdict().items()
+                    if k not in tree and k != "count"
+                }
+            )
+
+        # ---- centralized phase (Computation Centers, steps 11-16)
+        t0 = time.perf_counter()
+        revealed = {}
+        if self.protect != "none":
+            agg_protected = self.agg.aggregate(protected)
+            pts = self._post_protect_points(points)
+            if len(pts) < self.agg.scheme.num_shares:
+                # non-contiguous survivor subset: slice the share axis to
+                # the live points and reveal from them explicitly
+                sel = jnp.asarray([p - 1 for p in pts])
+                sliced = jax.tree_util.tree_map(
+                    lambda sh: sh[sel], agg_protected
+                )
+                revealed = self.agg.reveal(sliced, points=list(pts))
+            else:
+                revealed = self.agg.reveal(agg_protected)
+        else:
+            self._post_protect_points(points)
+        summed_plain = {
+            k: sum(pl[k] for pl in plain) for k in plain[0]
+        } if plain and plain[0] else {}
+        global_h = revealed.get("hessian", summed_plain.get("hessian"))
+        global_g = revealed.get("gradient", summed_plain.get("gradient"))
+        global_dev = revealed.get("deviance", summed_plain.get("deviance"))
+        # regularized objective at the current beta (summaries' beta) —
+        # formed through the same expression as the fused graph so both
+        # drivers compare bit-identical floats at the tolerance boundary
+        obj = float(regularized_objective(global_dev, self.beta, self.lam,
+                                          self.l1))
+        self.central_seconds += time.perf_counter() - t0
+
+        def make_beta_new():
+            t1 = time.perf_counter()
+            beta_new = prox_newton_step(
+                self.beta,
+                jnp.asarray(global_h, jnp.float64),
+                jnp.asarray(global_g, jnp.float64),
+                self.lam,
+                self.l1,
+            )
+            self.central_seconds += time.perf_counter() - t1
+            return beta_new
+
+        return obj, make_beta_new
+
+    def _round_fused(self, parts, points):
+        """One fused jitted iteration (one dispatch + one host sync).
+
+        X keeps the float64 payload: at protocol scale the f32-storage
+        variant (``pack_partitions(..., dtype=jnp.float32)``, the TPU
+        layout) lands right AT the fixed-point quantization boundary
+        against the f64 loop path, while costing the same wall-clock here
+        — the f64 gemvs are bandwidth-bound either way.  The pack is
+        LRU-cached on the part buffers, so repeated rounds and
+        straggler-shrunk cohorts don't re-pack.
+
+        The fused graph has no host point between protect and reveal, so
+        the mid-round hooks fire (and the reveal points re-derive) just
+        before dispatch — an approximation that is exact for the revealed
+        values, since reconstruction from any >= t points is the same
+        field arithmetic wherever it happens.
+        """
+        packed = pack_partitions(parts)
+        pts = self._post_protect_points(points)
+        if pts is not None and len(pts) == self.agg.scheme.num_shares:
+            # all centers live: the default first-t reveal secure_fit
+            # always used (and the cache-friendliest static points value)
+            pts = None
+        self.key, sub = jax.random.split(self.key)
+        beta_new, obj = _fused_secure_iteration(
+            self.beta, sub, packed.X, packed.X32, packed.y, packed.counts,
+            self.lam, self.agg, self.protect, self.l1,
+            self.agg.scheme.interpret, points=pts,
+        )
+        # the one host sync per iteration
+        return float(obj), lambda: beta_new
+
+    def run(self, max_iter: int | None = None) -> FitResult:
+        limit = self.max_iter if max_iter is None else max_iter
+        t_total = time.perf_counter()
+        while not self.converged and self.iteration < limit:
+            self.step()
+        self.total_seconds += time.perf_counter() - t_total
+        return self.result()
+
+    def result(self) -> FitResult:
+        # central_seconds stays 0.0 on the fused path: institution and
+        # center phases live in one fused graph (the split remains
+        # observable on the loop path and in protocol.StudyCoordinator)
+        return FitResult(
+            np.asarray(self.beta), self.iteration, self.converged,
+            list(self.trace), central_seconds=self.central_seconds,
+            total_seconds=self.total_seconds,
+            bytes_transmitted=self.bytes_transmitted,
+        )
+
+    # -- checkpointing ------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Everything needed to resume bit-identically after a crash."""
+        return {
+            "beta": np.asarray(self.beta),
+            "iteration": np.asarray(self.iteration),
+            "obj_prev": np.asarray(self._obj_prev),
+            "trace": np.asarray(self.trace),
+            "key": np.asarray(self.key),
+            "converged": np.asarray(self.converged),
+            "bytes": np.asarray(self.bytes_transmitted),
+            "online": np.asarray(self.online),
+            "latency": np.asarray(self.latency),
+            "centers_online": np.asarray(self.centers_online),
+        }
+
+    def load_state_dict(self, state: dict):
+        self.beta = jnp.asarray(state["beta"])
+        self.iteration = int(state["iteration"])
+        self._obj_prev = float(state["obj_prev"])
+        self.trace = [float(x) for x in state["trace"]]
+        self.key = jnp.asarray(state["key"], dtype=jnp.uint32)
+        self.converged = bool(state["converged"])
+        self.bytes_transmitted = int(state.get("bytes", 0))
+        if "online" in state:
+            self.online = [bool(v) for v in state["online"]]
+        if "latency" in state:
+            self.latency = [float(v) for v in state["latency"]]
+        if "centers_online" in state:
+            self.centers_online = [bool(v) for v in state["centers_online"]]
 
 
 def secure_fit(
@@ -395,87 +714,13 @@ def secure_fit(
     iteration); the reference backend runs the per-institution Python loop
     (the oracle).  Pass ``fused=False`` to force the loop path on any
     backend — that is the pre-fusion baseline the e2e benchmark times.
-    """
-    if protect not in PROTECT_CHOICES:
-        raise ValueError(f"protect must be one of {PROTECT_CHOICES}")
-    agg = aggregator or SecureAggregator()
-    if fused is None:
-        fused = agg.backend == "pallas"
-    if fused:
-        if agg.backend != "pallas":
-            raise ValueError(
-                "fused secure_fit requires the pallas backend (the flat "
-                "share buffers ARE its wire format); use fused=False with "
-                "backend='reference'"
-            )
-        return _secure_fit_fused(
-            parts, lam, tol, max_iter, protect, agg, seed, l1
-        )
-    key = jax.random.PRNGKey(seed)
-    d = parts[0][0].shape[1]
-    beta = jnp.zeros((d,), dtype=jnp.float64)
-    dev_prev = np.inf
-    trace: list[float] = []
-    converged = False
-    central_s = 0.0
-    # telemetry from static shapes (shapes repeat every iteration; no
-    # per-leaf walk inside the loop)
-    per_iter_bytes = _iteration_bytes(d, len(parts), protect, agg)
-    nbytes = 0
-    t_total = time.perf_counter()
-    it = 0
-    for it in range(1, max_iter + 1):
-        # ---- distributed phase (institution-local, Algorithm 1 steps 3-8)
-        locals_: list[LocalSummaries] = [
-            local_summaries(beta, Xj, yj) for Xj, yj in parts
-        ]
-        protected, plain = [], []
-        for s in locals_:
-            tree = _protected_tree(protect, s.hessian, s.gradient,
-                                   s.deviance)
-            key, sub = jax.random.split(key)
-            protected.append(agg.protect(sub, tree) if tree else {})
-            plain.append(
-                {
-                    k: v
-                    for k, v in s._asdict().items()
-                    if k not in tree and k != "count"
-                }
-            )
-        nbytes += per_iter_bytes
 
-        # ---- centralized phase (Computation Centers, steps 11-16)
-        t0 = time.perf_counter()
-        agg_protected = agg.aggregate(protected) if protect != "none" else {}
-        revealed = agg.reveal(agg_protected) if agg_protected else {}
-        summed_plain = {
-            k: sum(pl[k] for pl in plain) for k in plain[0]
-        } if plain[0] else {}
-        global_h = revealed.get("hessian", summed_plain.get("hessian"))
-        global_g = revealed.get("gradient", summed_plain.get("gradient"))
-        global_dev = revealed.get("deviance", summed_plain.get("deviance"))
-        # regularized objective at the current beta (summaries' beta) —
-        # formed through the same expression as the fused graph so both
-        # drivers compare bit-identical floats at the tolerance boundary
-        obj = float(regularized_objective(global_dev, beta, lam, l1))
-        trace.append(obj)
-        if bool(should_stop(dev_prev, obj, tol, len(parts),
-                            agg.codec.scale)):
-            central_s += time.perf_counter() - t0
-            converged = True
-            break
-        dev_prev = obj
-        beta = prox_newton_step(
-            beta,
-            jnp.asarray(global_h, jnp.float64),
-            jnp.asarray(global_g, jnp.float64),
-            lam,
-            l1,
-        )
-        central_s += time.perf_counter() - t0
-    total_s = time.perf_counter() - t_total
-    return FitResult(
-        np.asarray(beta), it, converged, trace,
-        central_seconds=central_s, total_seconds=total_s,
-        bytes_transmitted=nbytes,
+    This is the one-call form of ``SecureFitDriver`` (which adds stepwise
+    execution, liveness hooks and ``state_dict`` crash-resume); a
+    fault-free driver run is bit-identical to what this always produced.
+    """
+    driver = SecureFitDriver(
+        parts, lam=lam, tol=tol, max_iter=max_iter, protect=protect,
+        aggregator=aggregator, seed=seed, l1=l1, fused=fused,
     )
+    return driver.run()

@@ -56,6 +56,7 @@ from .batched_summaries import (
 )
 from .logreg import local_summaries
 from .newton import (
+    RoundReport,
     _fused_secure_iteration,
     _iteration_bytes,
     newton_step,
@@ -130,14 +131,8 @@ class ComputationCenter:
         self._stash = []
 
 
-@dataclasses.dataclass
-class RoundReport:
-    iteration: int
-    responders: list
-    stragglers: list
-    centers_used: list
-    objective: float
-    bytes_transmitted: int
+# RoundReport now lives in .newton (it is shared by SecureFitDriver and the
+# coordinator) and is re-exported here for the existing import surface.
 
 
 # the result is cheap arithmetic; the small bound just avoids pinning
@@ -210,10 +205,24 @@ class StudyCoordinator:
                 f"summaries_backend must be one of {SUMMARY_BACKENDS}"
             )
         self.summaries_backend = summaries_backend
-        w = num_centers or self.agg.scheme.num_shares
-        if w != self.agg.scheme.num_shares:
-            raise ValueError("num_centers must equal scheme.num_shares")
-        self.centers = [ComputationCenter(i + 1) for i in range(w)]
+        # Fewer centers than shares is allowed: the scheme's remaining
+        # evaluation points stay FREE, and ``provision_center`` can bring a
+        # replacement up at one of them after a center failure (a fresh
+        # point's share slice was never sent to the failed node).  More
+        # centers than shares is impossible — there is no share to give
+        # them — and fewer than t can never reconstruct.
+        w = self.agg.scheme.num_shares
+        n_centers = w if num_centers is None else num_centers
+        if not (self.agg.scheme.threshold <= n_centers <= w):
+            raise ValueError(
+                f"num_centers must lie in [threshold={self.agg.scheme.threshold}, "
+                f"num_shares={w}] (points beyond num_centers stay free for "
+                "re-provisioning)"
+            )
+        self.centers = [ComputationCenter(i + 1) for i in range(n_centers)]
+        # one-shot callables fired between protect and reveal of the next
+        # round — the chaos harness's center-death-inside-a-round events
+        self._midround_hooks: list[Callable[[], None]] = []
         self.deadline = deadline
         self.min_responders = min_responders
         self.tol = tol
@@ -264,6 +273,55 @@ class StudyCoordinator:
         self.institutions = [i for i in self.institutions if i.name != name]
         pack_cache_evict([(i.X, i.y) for i in gone])
 
+    def provision_center(self, index: int | None = None) -> ComputationCenter:
+        """Bring up a replacement/additional Computation Center.
+
+        With no ``index``, prefer a FRESH evaluation point — one of the
+        scheme's points in 1..w not currently assigned to any center —
+        since a fresh point's share slice was never distributed to the
+        failed node; fall back to replacing the lowest-indexed dead
+        center in place.  Replacing at an old point is still safe:
+        every round shares fresh polynomials, so a replacement center
+        learns nothing about earlier rounds' secrets, and
+        ``SecureAggregator._validated_points`` guards every reveal
+        against duplicate/out-of-range points.  The next round's shares
+        are simply cut against the new point set.
+        """
+        w = self.agg.scheme.num_shares
+        used = {c.index for c in self.centers}
+        if index is None:
+            free = [p for p in range(1, w + 1) if p not in used]
+            if free:
+                index = free[0]
+            else:
+                dead = [c.index for c in self.centers if not c.online]
+                if not dead:
+                    raise RuntimeError(
+                        "no free evaluation point and no dead center to "
+                        "replace"
+                    )
+                index = min(dead)
+        if not (1 <= index <= w):
+            raise ValueError(f"evaluation point must be in 1..{w}")
+        fresh = ComputationCenter(index)
+        if index in used:
+            old = next(c for c in self.centers if c.index == index)
+            if old.online:
+                raise RuntimeError(
+                    f"center at point {index} is still online; refusing to "
+                    "replace it"
+                )
+            self.centers[self.centers.index(old)] = fresh
+        else:
+            self.centers.append(fresh)
+            self.centers.sort(key=lambda c: c.index)
+        return fresh
+
+    def _fire_midround_hooks(self):
+        hooks, self._midround_hooks = self._midround_hooks, []
+        for h in hooks:
+            h()
+
     # -- one Newton round ------------------------------------------------------
     def step(self, fused: bool | None = None) -> RoundReport:
         """One secure Newton round.  ``fused=None`` uses the constructor
@@ -274,12 +332,21 @@ class StudyCoordinator:
             raise ValueError(
                 "fused coordinator rounds require the pallas backend"
             )
-        self.iteration += 1
+        # Validate the round BEFORE mutating any state: a round that cannot
+        # run (below quorum, below center threshold) must leave
+        # iteration/trace/beta exactly as they were, so a supervised retry
+        # or a state_dict resume replays cleanly (the counter used to
+        # advance first, making every failed round an off-by-one in the
+        # resumed trace).
         cohort = self.cohort()
+        if self.protect != "none":
+            self.live_centers()
         stragglers = [
             i.name for i in self.institutions
             if i.online and i not in cohort
         ]
+        # bytes are accounted at protect time: a center that dies between
+        # protect and reveal already received its slice this round
         num_live = sum(1 for c in self.centers if c.online)
         nbytes = _round_bytes(
             cohort[0].X.shape[1], len(cohort), self.protect, self.agg,
@@ -307,12 +374,22 @@ class StudyCoordinator:
             plains.append(plain)
             if shares:
                 submissions.append(shares)
-                for w_idx, center in enumerate(self.centers):
+                for center in self.centers:
                     if not center.online:
                         continue  # lost share slice; t-of-w absorbs it
+                    # slice by the center's own evaluation point, not its
+                    # list position: after re-provisioning the point set
+                    # may be non-contiguous
                     center.receive(jax.tree_util.tree_map(
-                        lambda s, i=w_idx: s[i], shares
+                        lambda s, i=center.index - 1: s[i], shares
                     ))
+
+        # center death BETWEEN protect and reveal lands here: the one-shot
+        # mid-round hooks flip liveness after the slices were distributed,
+        # and live_centers() below reveals from the survivors (>= t is
+        # bit-identical — any t-subset reconstructs exactly) or raises and
+        # aborts the round; the retry re-shares with fresh polynomials
+        self._fire_midround_hooks()
 
         # centers run Algorithm 2 share-wise — each stacks its S received
         # slices and reduces them in one fused pass (exact in the field,
@@ -357,6 +434,12 @@ class StudyCoordinator:
         reduction over a short share axis.  ``summaries_backend`` picks
         the precision contract (see ``__init__``).
         """
+        # the fused graph has no host point between protect and reveal, so
+        # the mid-round death hooks fire before dispatch and the reveal
+        # points are derived from the survivors — exact for the revealed
+        # values (any >= t points reconstruct identically), and the same
+        # abort semantics as the loop path below threshold
+        self._fire_midround_hooks()
         if self.protect != "none":
             # identical failure semantics to the loop path, checked
             # BEFORE any computation so a dropped center can't be
@@ -377,7 +460,12 @@ class StudyCoordinator:
 
     def _finish_round(self, obj, make_beta_new, cohort, stragglers,
                       nbytes) -> RoundReport:
-        """Convergence bookkeeping shared verbatim by both round shapes."""
+        """Convergence bookkeeping shared verbatim by both round shapes.
+
+        The ONLY place round state mutates: a raise anywhere earlier in
+        ``step`` leaves the coordinator exactly as it was.
+        """
+        self.iteration += 1
         self.trace.append(obj)
         if bool(should_stop(self._obj_prev, obj, self.tol, len(cohort),
                             self.agg.codec.scale)):

@@ -120,7 +120,8 @@ def run_logreg(args) -> dict:
         agg = SecureAggregator(
             scheme=ShamirScheme(threshold=args.threshold,
                                 num_shares=args.centers,
-                                backend="pallas")
+                                backend="pallas"),
+            overflow_check=True,
         )
         insts = [
             Institution(f"inst{j}", Xj, yj)
@@ -167,10 +168,15 @@ def run_logreg(args) -> dict:
         }
         print(json.dumps(out, indent=2))
         return out
+    # overflow_check: armed by default on every launch secure path — the
+    # fixed-point headroom assert is a fixed ~1-3 ms/round host callback
+    # (<= 2% of a production fused round; benchmarks/fault_overhead.py),
+    # and a raise beats silently saturating into a plausible reveal
     agg = SecureAggregator(
         scheme=ShamirScheme(threshold=args.threshold,
                             num_shares=args.centers,
-                            backend="pallas" if args.fused else "reference")
+                            backend="pallas" if args.fused else "reference"),
+        overflow_check=True,
     )
     insts = [
         Institution(f"inst{j}", Xj, yj)
@@ -257,7 +263,8 @@ def run_lm(args) -> dict:
     )
     opt_state = adamw_init(params)
     S = max(1, args.institutions)
-    agg = SecureAggregator(backend=args.secure_backend) \
+    agg = SecureAggregator(backend=args.secure_backend,
+                           overflow_check=True) \
         if args.secure_agg == "shamir" else None
     err_fb = init_error_feedback(params) if args.compress else None
 

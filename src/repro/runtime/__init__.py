@@ -1,4 +1,5 @@
 from .managers import (
+    EVENT_KINDS,
     FailureInjector,
     HeartbeatMonitor,
     RemeshPlan,
@@ -6,12 +7,17 @@ from .managers import (
     StragglerPolicy,
     plan_remesh,
 )
+from .supervisor import FaultPolicy, RoundSupervisor, SupervisedRound
 
 __all__ = [
+    "EVENT_KINDS",
     "FailureInjector",
+    "FaultPolicy",
     "HeartbeatMonitor",
     "RemeshPlan",
+    "RoundSupervisor",
     "SimClock",
     "StragglerPolicy",
+    "SupervisedRound",
     "plan_remesh",
 ]

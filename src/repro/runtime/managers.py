@@ -30,6 +30,7 @@ __all__ = [
     "HeartbeatMonitor",
     "StragglerPolicy",
     "FailureInjector",
+    "EVENT_KINDS",
     "plan_remesh",
     "RemeshPlan",
 ]
@@ -62,15 +63,26 @@ class HeartbeatMonitor:
     def register(self, worker: str):
         self._last[worker] = self.clock.now()
 
-    def beat(self, worker: str):
+    def beat(self, worker: str) -> bool:
+        """Record a heartbeat; returns False for an unknown worker.
+
+        A heartbeat racing a ``deregister`` (the packet was in flight when
+        the coordinator dropped the worker) is normal fleet behaviour, not
+        an error: the stale beat is dropped and the worker stays
+        deregistered until it explicitly re-``register``s.
+        """
         if worker not in self._last:
-            raise KeyError(f"unregistered worker {worker!r}")
+            return False
         self._last[worker] = self.clock.now()
+        return True
 
     def deregister(self, worker: str):
         self._last.pop(worker, None)
 
     def alive(self) -> list[str]:
+        # Boundary: a worker whose last beat is *exactly* ``timeout`` old is
+        # still alive (<=); ``dead`` is its strict complement (>), so the two
+        # lists always partition the registered set.
         now = self.clock.now()
         return sorted(
             w for w, t in self._last.items() if now - t <= self.timeout
@@ -108,12 +120,38 @@ class StragglerPolicy:
         return num_responders >= need
 
 
+# Chaos-event vocabulary understood by FailureInjector.normalize (and by
+# runtime.supervisor.RoundSupervisor, which interprets the center/latency
+# events against the secure-protocol drivers):
+#
+#   "name"                            legacy shorthand for ("crash", name)
+#   ("crash", name)                   institution/worker fail-stop
+#   ("recover", name)                 crashed/flapped party rejoins
+#   ("flap", name, duration)          transient outage: stops heartbeating
+#                                     and misses deadlines for ``duration``
+#                                     sim-seconds, then self-heals
+#   ("straggle", name, latency, duration)
+#                                     straggler burst: responds after
+#                                     ``latency`` sim-seconds (keeps
+#                                     heartbeating) for ``duration``
+#   ("center_crash", index)           computation center fail-stop
+#   ("center_recover", index)         crashed center rejoins
+#   ("center_midround", index)        center dies BETWEEN protect and reveal
+#                                     of the next round (one-shot)
+#   ("provision_center", [index])     operator-driven replacement center
+EVENT_KINDS = (
+    "crash", "recover", "flap", "straggle",
+    "center_crash", "center_recover", "center_midround", "provision_center",
+)
+
+
 @dataclasses.dataclass
 class FailureInjector:
     """Deterministic failure schedule for chaos tests.
 
-    ``schedule`` maps step -> iterable of worker names to kill (or
-    ``("recover", name)`` tuples to bring one back).
+    ``schedule`` maps step -> iterable of chaos events (see ``EVENT_KINDS``
+    above).  The legacy forms — a bare worker name meaning "kill", and
+    ``("recover", name)`` — are still accepted everywhere.
     """
 
     schedule: dict = dataclasses.field(default_factory=dict)
@@ -121,16 +159,36 @@ class FailureInjector:
     def events_at(self, step: int) -> list:
         return list(self.schedule.get(step, ()))
 
+    @staticmethod
+    def normalize(ev) -> tuple:
+        """Canonicalize one schedule entry to a ``(kind, *args)`` tuple."""
+        if isinstance(ev, str):
+            return ("crash", ev)
+        ev = tuple(ev)
+        if not ev or ev[0] not in EVENT_KINDS:
+            raise ValueError(f"unknown chaos event {ev!r}")
+        return ev
+
     def apply(self, step: int, monitor: HeartbeatMonitor) -> list[str]:
-        """Kill/recover per schedule; returns the names affected."""
+        """Kill/recover per schedule against a bare heartbeat monitor;
+        returns the names affected.
+
+        This is the LM-loop entry point and only interprets worker-liveness
+        events: ``crash``/``flap`` deregister (a flap degrades to a crash
+        until its ``recover``), ``recover`` (re-)registers — including a
+        worker never seen before, which is how a replacement node joins the
+        fleet.  Center and latency events are no-ops here; the
+        ``RoundSupervisor`` gives them meaning against protocol drivers.
+        """
         hit = []
         for ev in self.events_at(step):
-            if isinstance(ev, tuple) and ev[0] == "recover":
-                monitor.register(ev[1])
-                hit.append(ev[1])
-            else:
-                monitor.deregister(ev)
-                hit.append(ev)
+            kind, *args = self.normalize(ev)
+            if kind == "recover":
+                monitor.register(args[0])
+                hit.append(args[0])
+            elif kind in ("crash", "flap"):
+                monitor.deregister(args[0])
+                hit.append(args[0])
         return hit
 
 

@@ -92,6 +92,9 @@ class SelectionCoordinator:
     def remove_institution(self, name: str):
         self.study.remove_institution(name)
 
+    def provision_center(self, index: int | None = None):
+        return self.study.provision_center(index)
+
     @property
     def num_chunks(self) -> int:
         return self.driver.num_chunks()
@@ -112,9 +115,14 @@ class SelectionCoordinator:
         granularity: stragglers/offline institutions are excluded from
         every round of this chunk (their folds are untouched for when
         they return), and a below-threshold center set raises before any
-        computation.
+        computation.  Armed mid-round center-death hooks fire at the same
+        boundary (chunk granularity — the sweep's protect..reveal lives
+        inside one scan): >= t survivors reveal the whole chunk
+        bit-identically, below t the chunk aborts unrun and a retry
+        re-shares.
         """
         cohort = self.study.cohort()
+        self.study._fire_midround_hooks()
         if self.settings.protect != "none":
             points = tuple(c.index for c in self.study.live_centers())
             num_live = len(points)

@@ -20,9 +20,33 @@ def test_heartbeat_death_and_recovery():
     clock.advance(7.0)  # b, c last beat 12s ago; a 7s ago
     assert mon.alive() == ["a"]
     assert mon.dead() == ["b", "c"]
-    mon.beat("a")
-    with pytest.raises(KeyError):
-        mon.beat("zz")
+    assert mon.beat("a") is True
+    assert mon.beat("zz") is False  # unknown worker: dropped, not an error
+
+
+def test_beat_racing_deregister_does_not_resurrect():
+    """An in-flight heartbeat arriving after deregister must be dropped:
+    the worker stays out until it explicitly re-registers."""
+    clock = SimClock()
+    mon = HeartbeatMonitor(clock, timeout=10.0)
+    mon.register("a")
+    mon.deregister("a")
+    assert mon.beat("a") is False
+    assert mon.alive() == [] and mon.dead() == []
+    mon.register("a")
+    assert mon.beat("a") is True
+    assert mon.alive() == ["a"]
+
+
+def test_alive_dead_timeout_equality_boundary():
+    """Exactly-at-timeout is alive (<=); alive/dead always partition."""
+    clock = SimClock()
+    mon = HeartbeatMonitor(clock, timeout=10.0)
+    mon.register("a")
+    clock.advance(10.0)
+    assert mon.alive() == ["a"] and mon.dead() == []
+    clock.advance(1e-9)
+    assert mon.alive() == [] and mon.dead() == ["a"]
 
 
 def test_straggler_policy_split_and_quorum():
@@ -45,6 +69,55 @@ def test_failure_injector_kill_and_recover():
     assert inj.apply(3, mon) == ["b"]
     assert mon.alive() == ["a"]
     assert inj.apply(5, mon) == ["b"]
+    assert mon.alive() == ["a", "b"]
+
+
+def test_recover_of_never_registered_worker_joins():
+    """``recover`` of a name the monitor has never seen is a JOIN — that
+    is how a replacement node enters the fleet mid-run."""
+    clock = SimClock()
+    mon = HeartbeatMonitor(clock, timeout=10.0)
+    mon.register("a")
+    inj = FailureInjector({1: [("recover", "newbie")]})
+    assert inj.apply(1, mon) == ["newbie"]
+    assert mon.alive() == ["a", "newbie"]
+
+
+def test_failure_injector_kill_of_unknown_worker_is_noop():
+    clock = SimClock()
+    mon = HeartbeatMonitor(clock, timeout=10.0)
+    mon.register("a")
+    inj = FailureInjector({1: ["ghost"]})
+    assert inj.apply(1, mon) == ["ghost"]  # reported, but nothing to drop
+    assert mon.alive() == ["a"]
+
+
+def test_failure_injector_normalize_vocabulary():
+    assert FailureInjector.normalize("a") == ("crash", "a")
+    assert FailureInjector.normalize(("recover", "a")) == ("recover", "a")
+    assert FailureInjector.normalize(["flap", "a", 2.0]) == ("flap", "a", 2.0)
+    assert FailureInjector.normalize(("center_midround", 2)) == \
+        ("center_midround", 2)
+    with pytest.raises(ValueError, match="unknown chaos event"):
+        FailureInjector.normalize(("explode", "a"))
+    with pytest.raises(ValueError, match="unknown chaos event"):
+        FailureInjector.normalize(())
+
+
+def test_failure_injector_flap_degrades_to_crash_in_lm_loop():
+    """The LM loop has no latency model, so a flap is a deregister until
+    its recover; center events are no-ops against a bare monitor."""
+    clock = SimClock()
+    mon = HeartbeatMonitor(clock, timeout=10.0)
+    mon.register("a")
+    mon.register("b")
+    inj = FailureInjector({
+        1: [("flap", "b", 2.0), ("center_crash", 1)],
+        2: [("recover", "b")],
+    })
+    assert inj.apply(1, mon) == ["b"]
+    assert mon.alive() == ["a"]
+    assert inj.apply(2, mon) == ["b"]
     assert mon.alive() == ["a", "b"]
 
 

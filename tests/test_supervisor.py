@@ -1,0 +1,435 @@
+"""Fault-tolerant round supervision: the deterministic chaos matrix.
+
+The invariant under test (see ``runtime/supervisor.py``): any survivable
+``FailureInjector`` schedule converges to the fault-free oracle's beta
+within fixed-point quantization, on all three secure drivers; genuinely
+unsurvivable schedules surface the driver's exact ``RuntimeError``.
+Center-fault schedules are *bit*-identical (any >= t evaluation points
+reconstruct the same field element); institution faults are oracle-exact
+when they heal before convergence (the Newton fixed point doesn't move).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    Institution,
+    SecureAggregator,
+    SecureFitDriver,
+    ShamirScheme,
+    StudyCoordinator,
+)
+from repro.data import generate_synthetic
+from repro.runtime import (
+    FailureInjector,
+    FaultPolicy,
+    RoundSupervisor,
+    StragglerPolicy,
+)
+
+NUM_INST = 4
+NAMES = [f"i{k}" for k in range(NUM_INST)]
+
+
+@pytest.fixture(scope="module")
+def study():
+    return generate_synthetic(
+        jax.random.PRNGKey(3), num_institutions=NUM_INST,
+        records_per_institution=150, dim=5,
+    )
+
+
+def make_insts(study):
+    return [
+        Institution(n, X, y) for n, (X, y) in zip(NAMES, study.parts)
+    ]
+
+
+def make_driver(kind, study, **kw):
+    if kind == "coordinator":
+        return StudyCoordinator(
+            make_insts(study), lam=1.0, protect="gradient", **kw
+        )
+    if kind == "coordinator-fused":
+        return StudyCoordinator(
+            make_insts(study), lam=1.0, protect="gradient", fused=True,
+            aggregator=SecureAggregator(backend="pallas"), **kw
+        )
+    if kind == "secure_fit":
+        return SecureFitDriver(
+            study.parts, lam=1.0, protect="gradient", names=NAMES,
+            fused=False, **kw
+        )
+    if kind == "secure_fit-fused":
+        return SecureFitDriver(
+            study.parts, lam=1.0, protect="gradient", names=NAMES,
+            aggregator=SecureAggregator(backend="pallas"), fused=True, **kw
+        )
+    raise ValueError(kind)
+
+
+def final_beta(driver):
+    return np.asarray(driver.beta)
+
+
+def quantization(study, driver):
+    return (len(study.parts) + 1) * 0.5 / driver.agg.codec.scale
+
+
+@pytest.fixture(scope="module")
+def oracle_betas(study):
+    """Fault-free converged beta per driver kind (the chaos oracle)."""
+    out = {}
+    for kind in ("coordinator", "coordinator-fused", "secure_fit",
+                 "secure_fit-fused"):
+        drv = make_driver(kind, study)
+        RoundSupervisor(drv, policy=FaultPolicy()).run(max_rounds=50)
+        out[kind] = final_beta(drv)
+    return out
+
+
+def policy(**kw):
+    kw.setdefault("max_retries", 4)
+    kw.setdefault("heartbeat_timeout", 3.0)
+    kw.setdefault(
+        "straggler", StragglerPolicy(deadline=2.0, quorum_fraction=0.5)
+    )
+    return FaultPolicy(**kw)
+
+
+# every schedule here is survivable and heals before convergence; the
+# round numbers land inside the ~6-9 round fit
+SURVIVABLE = {
+    # flap heals at t=4 (round 5), well before the ~6-9 round fit converges
+    "flap": {2: [("flap", "i1", 3.0)]},
+    "straggle_burst": {2: [("straggle", "i2", 9.0, 2.0)]},
+    "crash_recover": {2: [("crash", "i0")], 4: [("recover", "i0")]},
+    "center_crash_recover": {
+        2: [("center_crash", 2)], 4: [("center_recover", 2)],
+    },
+    "center_midround": {3: [("center_midround", 1)]},
+    "mixed": {
+        2: [("flap", "i1", 5.0)],
+        3: [("center_crash", 2)],
+        4: [("recover", "i1")],
+        5: [("center_midround", 1)],
+    },
+}
+
+TIER1_KINDS = ("coordinator", "secure_fit-fused")
+SLOW_KINDS = ("coordinator-fused", "secure_fit")
+
+
+def run_chaos(kind, study, schedule, oracle_betas, **pol_kw):
+    drv = make_driver(kind, study)
+    sup = RoundSupervisor(
+        drv, policy=policy(**pol_kw), injector=FailureInjector(schedule)
+    )
+    sup.run(max_rounds=60)
+    assert drv.converged
+    err = np.abs(final_beta(drv) - oracle_betas[kind]).max()
+    assert err <= quantization(study, drv), (kind, err)
+    return sup
+
+
+@pytest.mark.parametrize("schedule", sorted(SURVIVABLE))
+@pytest.mark.parametrize("kind", TIER1_KINDS)
+def test_survivable_schedule_matches_oracle(kind, schedule, study,
+                                            oracle_betas):
+    run_chaos(kind, study, SURVIVABLE[schedule], oracle_betas)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("schedule", sorted(SURVIVABLE))
+@pytest.mark.parametrize("kind", SLOW_KINDS)
+def test_survivable_schedule_matches_oracle_full_matrix(kind, schedule,
+                                                        study,
+                                                        oracle_betas):
+    run_chaos(kind, study, SURVIVABLE[schedule], oracle_betas)
+
+
+def test_degraded_round_telemetry(study, oracle_betas):
+    sup = run_chaos("coordinator", study, SURVIVABLE["mixed"], oracle_betas)
+    flagged = [r for r in sup.rounds if r.degraded]
+    assert flagged, "chaos run must produce degraded rounds"
+    # the RoundReport mirrors the supervisor record
+    for rec in sup.rounds:
+        if rec.report is None:
+            continue
+        assert rec.report.retries == rec.retries
+        assert rec.report.backoff_seconds == rec.backoff_seconds
+        assert rec.report.degraded == rec.degraded
+    # a fault-free supervised run reports all-default telemetry
+    drv = make_driver("coordinator", study)
+    sup0 = RoundSupervisor(drv, policy=policy())
+    sup0.run(max_rounds=50)
+    assert sup0.total_retries == 0 and sup0.total_backoff == 0.0
+    assert all(not r.degraded for r in sup0.rounds)
+    assert all(r.report.retries == 0 and not r.report.degraded
+               for r in sup0.rounds)
+
+
+def test_midround_below_threshold_aborts_and_reshares(study, oracle_betas):
+    """Both centers of a t=2 reveal die between protect and reveal: the
+    round aborts (reveals nothing), the supervisor re-provisions and the
+    retry re-shares with fresh polynomials — converging to the oracle."""
+    schedule = {2: [("center_midround", 1), ("center_midround", 2)]}
+    drv = make_driver("coordinator", study)
+    sup = RoundSupervisor(
+        drv, policy=policy(), injector=FailureInjector(schedule)
+    )
+    sup.run(max_rounds=60)
+    assert drv.converged
+    rec = sup.rounds[1]  # round 2
+    assert rec.aborted_attempts == 1 and rec.retries >= 1
+    assert rec.report.aborted_attempts == 1
+    err = np.abs(final_beta(drv) - oracle_betas["coordinator"]).max()
+    assert err <= quantization(study, drv)
+
+
+def test_center_reprovision_uses_fresh_point(study, oracle_betas):
+    """w=4 scheme run with 3 centers: the spare evaluation point is the
+    replacement's fresh identity after a crash."""
+    agg = SecureAggregator(scheme=ShamirScheme(threshold=2, num_shares=4))
+    drv = StudyCoordinator(
+        make_insts(study), lam=1.0, protect="gradient", aggregator=agg,
+        num_centers=3,
+    )
+    schedule = {2: [("center_crash", 1), ("center_crash", 2)]}
+    sup = RoundSupervisor(
+        drv, policy=policy(), injector=FailureInjector(schedule)
+    )
+    sup.run(max_rounds=60)
+    assert drv.converged
+    points = {c.index for c in drv.centers if c.online}
+    assert 4 in points  # the spare point was provisioned
+    err = np.abs(final_beta(drv) - oracle_betas["coordinator"]).max()
+    assert err <= quantization(study, drv)
+
+
+@pytest.mark.parametrize("kind", ("coordinator", "secure_fit"))
+def test_unsurvivable_center_loss_raises_exact_error(kind, study):
+    drv = make_driver(kind, study)
+    sup = RoundSupervisor(
+        drv, policy=policy(max_retries=2, reprovision_after=0),
+        injector=FailureInjector(
+            {1: [("center_crash", 1), ("center_crash", 2)]}
+        ),
+    )
+    with pytest.raises(RuntimeError,
+                       match="aggregate unrecoverable this round"):
+        sup.step()
+    assert drv.iteration == 0  # failed rounds leave state untouched
+
+
+@pytest.mark.parametrize("kind", ("coordinator", "secure_fit"))
+def test_unsurvivable_quorum_raises_exact_error(kind, study):
+    drv = make_driver(
+        kind, study, min_responders=2,
+    )
+    sup = RoundSupervisor(
+        drv, policy=policy(max_retries=2),
+        injector=FailureInjector({1: [("crash", n) for n in NAMES]}),
+    )
+    with pytest.raises(RuntimeError, match="responders < min"):
+        sup.step()
+    assert drv.iteration == 0
+
+
+# -- the selection driver -----------------------------------------------------
+
+SEL_KW = dict(lambdas=(4.0, 1.0, 0.25), num_folds=3, rounds_per_sync=4,
+              max_rounds=12, seed=0)
+
+
+@pytest.fixture(scope="module")
+def sel_study():
+    return generate_synthetic(
+        jax.random.PRNGKey(5), num_institutions=NUM_INST,
+        records_per_institution=120, dim=4,
+    )
+
+
+def make_selection(sel_study):
+    from repro.selection import SelectionCoordinator
+
+    return SelectionCoordinator(
+        [Institution(n, X, y) for n, (X, y) in zip(NAMES, sel_study.parts)],
+        **SEL_KW,
+    )
+
+
+@pytest.fixture(scope="module")
+def sel_oracle(sel_study):
+    return make_selection(sel_study).run_path()
+
+
+def test_selection_center_faults_bit_identical(sel_study, sel_oracle):
+    """Center-only chaos on the λ sweep: crash, mid-chunk death below
+    threshold (abort + re-provision + re-share), recover — the selected
+    λ and every beta are BIT-identical to the fault-free sweep (any >= t
+    points reconstruct the same field element)."""
+    schedule = {
+        1: [("center_crash", 2)],
+        3: [("center_midround", 1)],
+        4: [("center_recover", 2)],
+    }
+    sel = make_selection(sel_study)
+    sup = RoundSupervisor(
+        sel, policy=policy(), injector=FailureInjector(schedule)
+    )
+    report = sup.run(max_rounds=40)
+    assert report.lambda_1se == sel_oracle.lambda_1se
+    assert np.array_equal(np.asarray(report.beta),
+                          np.asarray(sel_oracle.beta))
+    aborted = [r for r in sup.rounds if r.aborted_attempts]
+    assert aborted and aborted[0].round_no == 3
+
+
+def test_selection_flap_healing_between_chunks(sel_study, sel_oracle):
+    """An institution flap that heals between chunks: the affected chunk's
+    CV sums are over the responders (by design), and with the cohort whole
+    again for the remaining chunks the sweep selects the same λ and the
+    full-cohort refit lands on the oracle beta."""
+    sel = make_selection(sel_study)
+    sup = RoundSupervisor(
+        sel, policy=policy(),
+        injector=FailureInjector({2: [("flap", "i3", 0.5)]}),
+    )
+    report = sup.run(max_rounds=40)
+    assert report.lambda_1se == sel_oracle.lambda_1se
+    err = np.abs(np.asarray(report.beta)
+                 - np.asarray(sel_oracle.beta)).max()
+    assert err <= (len(sel_study.parts) + 1) * 0.5 / sel.study.agg.codec.scale
+
+
+@pytest.mark.parametrize("failure", ("centers", "quorum"))
+def test_selection_unsurvivable_raises_exact_error(sel_study, failure):
+    sel = make_selection(sel_study)
+    if failure == "centers":
+        schedule = {1: [("center_crash", 1), ("center_crash", 2)]}
+        match = "aggregate unrecoverable this round"
+    else:
+        sel.study.min_responders = 2
+        schedule = {1: [("crash", n) for n in NAMES]}
+        match = "responders < min"
+    sup = RoundSupervisor(
+        sel, policy=policy(max_retries=2, reprovision_after=0),
+        injector=FailureInjector(schedule),
+    )
+    with pytest.raises(RuntimeError, match=match):
+        sup.step()
+    assert sel.next_chunk == 0  # the failed chunk never ran
+
+
+# -- crash-resume -------------------------------------------------------------
+
+def test_secure_fit_resumes_bit_identically(study):
+    """The acceptance pin: a SecureFitDriver killed after k rounds and
+    rebuilt from state_dict() replays the rest of the fit bit-identically
+    (same rng stream, same trace floats, same beta)."""
+    a = make_driver("secure_fit", study)
+    res_a = a.run()
+    b = make_driver("secure_fit", study)
+    for _ in range(3):
+        b.step()
+    state = {k: np.array(v) for k, v in b.state_dict().items()}
+    c = make_driver("secure_fit", study)
+    c.load_state_dict(state)
+    res_c = c.run()
+    assert res_c.deviance_trace == res_a.deviance_trace
+    assert np.array_equal(res_c.beta, res_a.beta)
+    assert res_c.iterations == res_a.iterations
+    assert res_c.bytes_transmitted == res_a.bytes_transmitted
+
+
+def test_supervised_resume_replays_schedule(study):
+    """Crash the coordinator process mid-chaos: a fresh supervisor over a
+    state_dict-restored driver continues the SAME schedule (round numbers
+    keep their absolute meaning) and lands on the uninterrupted beta."""
+    schedule = {2: [("center_midround", 2)], 5: [("center_recover", 2)]}
+    a = make_driver("secure_fit", study)
+    sup_a = RoundSupervisor(
+        a, policy=policy(reprovision_after=0),
+        injector=FailureInjector(schedule),
+    )
+    res_a = sup_a.run(max_rounds=60)
+
+    b = make_driver("secure_fit", study)
+    sup_b = RoundSupervisor(
+        b, policy=policy(reprovision_after=0),
+        injector=FailureInjector(schedule),
+    )
+    for _ in range(3):
+        sup_b.step()
+    state = {k: np.array(v) for k, v in b.state_dict().items()}
+
+    c = make_driver("secure_fit", study)
+    c.load_state_dict(state)
+    assert not c.centers_online[1]  # the mid-round death survived the crash
+    sup_c = RoundSupervisor(
+        c, policy=policy(reprovision_after=0),
+        injector=FailureInjector(schedule),
+    )
+    assert sup_c.round_no == 3
+    res_c = sup_c.run(max_rounds=60)
+    assert res_c.deviance_trace == res_a.deviance_trace
+    assert np.array_equal(res_c.beta, res_a.beta)
+
+
+def test_coordinator_failed_round_is_invisible_to_resume(study):
+    """Satellite bugfix pin: a failed round must not advance iteration —
+    the trace of (2 rounds, failed round, 2 rounds) equals 4 clean rounds,
+    and a checkpoint taken after the failure resumes without off-by-one."""
+    insts = make_insts(study)
+    co = StudyCoordinator(insts, lam=1.0, protect="gradient",
+                          min_responders=NUM_INST)
+    co.step()
+    co.step()
+    key_before = np.array(co.key)
+    insts[0].online = False
+    with pytest.raises(RuntimeError, match="responders < min"):
+        co.step()
+    insts[0].online = True
+    assert co.iteration == 2 and len(co.trace) == 2
+    assert np.array_equal(np.array(co.key), key_before)
+
+    clean = StudyCoordinator(make_insts(study), lam=1.0,
+                             protect="gradient")
+    state = {k: np.array(v) for k, v in co.state_dict().items()}
+    resumed = StudyCoordinator(make_insts(study), lam=1.0,
+                               protect="gradient")
+    resumed.load_state_dict(state)
+    beta_clean = clean.run()
+    beta_failed = co.run()
+    beta_resumed = resumed.run()
+    assert clean.trace == co.trace == resumed.trace
+    assert np.array_equal(beta_clean, beta_failed)
+    assert np.array_equal(beta_clean, beta_resumed)
+
+
+# -- provisioning semantics ---------------------------------------------------
+
+def test_provision_center_semantics(study):
+    agg = SecureAggregator(scheme=ShamirScheme(threshold=2, num_shares=4))
+    co = StudyCoordinator(make_insts(study), lam=1.0, protect="gradient",
+                          aggregator=agg, num_centers=3)
+    co.centers[0].online = False
+    fresh = co.provision_center()
+    assert fresh.index == 4  # fresh point preferred over in-place swap
+    replaced = co.provision_center()
+    assert replaced.index == 1 and replaced.online  # in-place, lowest dead
+    with pytest.raises(RuntimeError, match="still online"):
+        co.provision_center(2)
+    with pytest.raises(RuntimeError, match="no free evaluation point"):
+        co.provision_center()
+    with pytest.raises(ValueError, match="must be in 1..4"):
+        co.provision_center(9)
+
+
+def test_num_centers_bounds(study):
+    agg = SecureAggregator(scheme=ShamirScheme(threshold=2, num_shares=3))
+    with pytest.raises(ValueError, match="num_centers must lie in"):
+        StudyCoordinator(make_insts(study), aggregator=agg, num_centers=1)
+    with pytest.raises(ValueError, match="num_centers must lie in"):
+        StudyCoordinator(make_insts(study), aggregator=agg, num_centers=4)
