@@ -8,10 +8,13 @@
 # centralized beta (R^2 = 1) and fused == pre-fusion-loop beta within
 # fixed-point quantization, the secure_psum smoke (sharded flat wire
 # payload <= 0.55x the per-leaf uint64 tree, bit-equal reveals), the
-# lambda-path smoke, and the fault-overhead smoke (supervised rounds at
+# lambda-path smoke, the fault-overhead smoke (supervised rounds at
 # negligible overhead + three chaos schedules recovering to the
-# fault-free oracle).  Run this before merging anything that touches
-# src/repro/core, src/repro/kernels or src/repro/runtime.
+# fault-free oracle), and the multihost-rounds smoke (scan residency =
+# one host sync per fit at loop-oracle beta parity; CPU-mesh round
+# latency flat in S; 2D distributed reveal bitwise vs the 1D wire;
+# real-kernel knob validation).  Run this before merging anything that
+# touches src/repro/core, src/repro/kernels or src/repro/runtime.
 #
 # BENCH_FULL=1 additionally refreshes BENCH_e2e_secure_fit.json at the
 # full acceptance config (S=8, d=128, N=2e5; several minutes) and
@@ -184,6 +187,53 @@ if failures:
 print("fault-overhead smoke OK")
 EOF
 
+echo "== multihost rounds smoke (scan residency + CPU-mesh latency) =="
+python benchmarks/multihost_rounds.py --quick --real-kernels >/dev/null
+
+python - <<'EOF'
+import json, sys
+
+rows = json.load(open("BENCH_multihost_rounds_smoke.json"))
+failures = []
+saw_scan, saw_flat, saw_2d, knob_rows = False, False, False, 0
+for r in rows:
+    if r.get("check") == "scan residency vs per-round fused":
+        saw_scan = True
+        print(f"scan residency: {r['speedup']:.2f}x measured, "
+              f"{r['host_syncs_scan_path']} host sync/fit "
+              f"(beta err {r['max_abs_err_vs_loop_oracle']:.3g}, "
+              f"modeled {r['modeled_speedup_at_50ms_rtt']:.2f}x "
+              f"at 50ms RTT)")
+        if not r["pass"]:
+            failures.append(f"scan residency gate failed: {r}")
+    if r.get("check") == "round latency flat in institutions":
+        saw_flat = True
+        print(f"round latency S={r['s_low']} -> S={r['s_high']}: "
+              f"{r['latency_ratio']:.3f}x (gate {r['gate']:.1f}x)")
+        if not r["pass"]:
+            failures.append(f"flat-in-S latency gate failed: {r}")
+    if r.get("mesh") == "pod_share_2d":
+        saw_2d = True
+        if r["max_abs_err_vs_1d_wire"] != 0.0 or not r["pass"]:
+            failures.append(f"2D distributed reveal != 1D wire: {r}")
+    if r.get("check") == "real-kernel knobs":
+        knob_rows += 1
+        if not r["pass"]:
+            failures.append(f"real-kernel knob invalid: {r}")
+if not saw_scan:
+    failures.append("scan residency gate row missing from multihost smoke")
+if not saw_flat:
+    failures.append("flat-in-S gate row missing from multihost smoke")
+if not saw_2d:
+    failures.append("2D mesh datapoint missing from multihost smoke")
+if knob_rows < 4:
+    failures.append("real-kernel knob rows missing from multihost smoke")
+if failures:
+    print("\n".join("FAIL: " + f for f in failures))
+    sys.exit(1)
+print("multihost rounds smoke OK")
+EOF
+
 if [[ "${BENCH_FULL:-0}" == "1" ]]; then
     echo "== e2e secure fit FULL (refreshes BENCH_e2e_secure_fit.json) =="
     python benchmarks/e2e_secure_fit.py >/dev/null
@@ -264,5 +314,30 @@ if bad:
 print(f"full fault-overhead gate OK "
       f"(supervision {sup[0]['overhead_pct']:+.2f}%/round, "
       f"{len(sched)} recovery schedules at oracle parity)")
+EOF
+    echo "== multihost rounds FULL (refreshes BENCH_multihost_rounds.json) =="
+    python benchmarks/multihost_rounds.py --real-kernels >/dev/null
+    python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_multihost_rounds.json"))
+bad = [r for r in rows if ("check" in r or "mesh" in r)
+       and "pass" in r and not r["pass"]]
+scan = [r for r in rows
+        if r.get("check") == "scan residency vs per-round fused"]
+flat = [r for r in rows
+        if r.get("check") == "round latency flat in institutions"]
+if not scan or not flat:
+    print("FAIL: gate rows missing from BENCH_multihost_rounds.json")
+    sys.exit(1)
+if bad:
+    # the acceptance gate: one host sync per scanned fit at loop-oracle
+    # beta parity (S=8, d=128, N=2e5), and CPU-mesh round latency at
+    # S=256 within 1.5x of S=8
+    print(f"FAIL: full multihost gate: {bad}")
+    sys.exit(1)
+print(f"full multihost gate OK "
+      f"(scan {scan[0]['speedup']:.2f}x measured / "
+      f"{scan[0]['modeled_speedup_at_50ms_rtt']:.2f}x at 50ms RTT, "
+      f"S-latency ratio {flat[0]['latency_ratio']:.3f}x)")
 EOF
 fi

@@ -11,12 +11,21 @@ from .batched_summaries import (
 )
 from .field import FIELD31, FIELD_WIDE, FieldSpec
 from .fixed_point import FixedPointCodec
-from .flatbuf import FlatLayout, pack_pytree, pack_pytree_batched, unpack_pytree
+from .flatbuf import (
+    FlatLayout,
+    pack_pytree,
+    pack_pytree_batched,
+    tile_slices,
+    unpack_pytree,
+    unpack_pytree_tile,
+)
 from .shamir import ShamirScheme
 from .secure_agg import (
     FlatProtected,
+    OUT_MODES,
     REVEAL_MODES,
     SecureAggregator,
+    ShardedAggregate,
     check_aggregation_headroom,
     secure_add,
     secure_psum,
@@ -35,7 +44,8 @@ from .protocol import ComputationCenter, Institution, RoundReport, StudyCoordina
 __all__ = [
     "FIELD31", "FIELD_WIDE", "FieldSpec", "FixedPointCodec", "ShamirScheme",
     "FlatLayout", "FlatProtected", "pack_pytree", "pack_pytree_batched",
-    "unpack_pytree",
+    "unpack_pytree", "tile_slices", "unpack_pytree_tile",
+    "OUT_MODES", "ShardedAggregate",
     "PackedPartitions", "batched_local_summaries", "pack_partitions",
     "CVSummaries", "batched_cv_summaries",
     "pack_cache_clear", "pack_cache_evict", "pack_cache_len",

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["FlatLayout", "pack_pytree", "pack_pytree_batched",
-           "unpack_pytree", "unpack_pytree_batched"]
+           "unpack_pytree", "unpack_pytree_batched",
+           "tile_slices", "unpack_pytree_tile"]
 
 LANES = 128
 ROW_ALIGN = 8  # float32 / uint32 sublane tile
@@ -140,6 +141,78 @@ def unpack_pytree_batched(buf: jnp.ndarray, layout: FlatLayout, dtype=None):
         )
         offset += n
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class _TileFragment:
+    """One leaf's intersection with one rows-tile (all indices static)."""
+
+    leaf: int                  # index into layout.shapes
+    leaf_start: int            # [leaf_start, leaf_stop) of the raveled leaf
+    leaf_stop: int
+    tile_offset: int           # where the fragment begins inside the tile
+
+
+def tile_slices(
+    layout: FlatLayout, num_tiles: int
+) -> tuple[tuple[_TileFragment, ...], ...]:
+    """Static table of leaf fragments per rows-tile.
+
+    Splitting the ``(rows, 128)`` buffer into ``num_tiles`` equal row
+    blocks (the ``psum_scatter`` layout of ``secure_psum`` with
+    ``reveal="sharded"``), entry ``t`` lists which slice of which raveled
+    leaf lives in tile ``t``.  Everything here is Python ints derived from
+    the static layout, so jitted code can consume the table as
+    compile-time constants.  The zero pad tail belongs to no fragment.
+    """
+    if layout.rows % num_tiles:
+        raise ValueError(
+            f"rows={layout.rows} does not split into {num_tiles} tiles; "
+            "pack with row_align=lcm(ROW_ALIGN, num_tiles)"
+        )
+    tile_elems = layout.padded // num_tiles
+    bounds, offset = [], 0
+    for shape in layout.shapes:
+        n = int(np.prod(shape, dtype=np.int64))
+        bounds.append((offset, offset + n))
+        offset += n
+    table = []
+    for t in range(num_tiles):
+        lo, hi = t * tile_elems, (t + 1) * tile_elems
+        frags = []
+        for i, (a, b) in enumerate(bounds):
+            s, e = max(a, lo), min(b, hi)
+            if s < e:
+                frags.append(_TileFragment(i, s - a, e - a, s - lo))
+        table.append(tuple(frags))
+    return tuple(table)
+
+
+def unpack_pytree_tile(
+    tile_buf: jnp.ndarray, layout: FlatLayout, tile_index: int,
+    num_tiles: int, dtype=None,
+):
+    """Decode ONE rows-tile into its leaf fragments (no gather needed).
+
+    ``tile_buf`` is one device's ``(rows / num_tiles, 128)`` slice of a
+    packed buffer; ``tile_index`` must be a static int (use the
+    ``ShardedAggregate`` wrapper when the index is a traced
+    ``axis_index``).  Returns ``{leaf_index: (start, stop, fragment)}``
+    where ``fragment`` is the flat slice ``raveled_leaf[start:stop]`` —
+    a leaf wholly inside the tile comes back complete and can be
+    reshaped to ``layout.shapes[leaf_index]`` directly.
+    """
+    flat = tile_buf.reshape(-1)
+    out = {}
+    for frag in tile_slices(layout, num_tiles)[tile_index]:
+        out_dt = dtype if dtype is not None else layout.dtypes[frag.leaf]
+        n = frag.leaf_stop - frag.leaf_start
+        out[frag.leaf] = (
+            frag.leaf_start,
+            frag.leaf_stop,
+            flat[frag.tile_offset:frag.tile_offset + n].astype(out_dt),
+        )
+    return out
 
 
 def unpack_pytree(buf: jnp.ndarray, layout: FlatLayout, dtype=None):

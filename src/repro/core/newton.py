@@ -21,6 +21,14 @@ Two execution shapes for the secure loop:
   Python loop over institutions, one protect per institution.  Kept as
   the correctness comparator and as the pre-fusion baseline that
   ``benchmarks/e2e_secure_fit.py`` measures against.
+
+On top of the per-round shapes, ``SecureFitDriver(rounds="scan")`` runs
+whole BLOCKS of fused rounds as one ``lax.scan`` (``core.scanfit``): the
+protect rng folds in-graph from a single key, convergence freezes the
+carry via ``lax.cond``, and the objective trace reads back once per
+block — one host sync per fit (``rounds_per_sync=None``) instead of one
+per round.  The per-round paths stay as the bit-exact oracles; tests
+pin the scanned trajectory against them at quantization tolerance.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .batched_summaries import (
+    BACKENDS as SUMMARY_BACKENDS,
     PackedPartitions,
     batched_local_summaries,
     pack_partitions,
@@ -393,6 +402,9 @@ class SecureFitDriver:
         names: Sequence[str] | None = None,
         deadline: float | None = None,
         min_responders: int = 1,
+        rounds: str = "step",
+        rounds_per_sync: int | None = None,
+        summaries_backend: str | None = None,
     ):
         if protect not in PROTECT_CHOICES:
             raise ValueError(f"protect must be one of {PROTECT_CHOICES}")
@@ -406,6 +418,29 @@ class SecureFitDriver:
                 "backend='reference'"
             )
         self.fused = fused
+        if rounds not in ("step", "scan"):
+            raise ValueError("rounds must be 'step' or 'scan'")
+        if rounds == "scan" and not fused:
+            raise ValueError(
+                "rounds='scan' requires the fused pallas path (the scan "
+                "body IS the fused iteration graph); use rounds='step' "
+                "with fused=False for the loop oracle"
+            )
+        if rounds_per_sync is not None and rounds_per_sync < 1:
+            raise ValueError("rounds_per_sync must be >= 1 (or None for "
+                             "one scan block per fit)")
+        self.rounds = rounds
+        self.rounds_per_sync = rounds_per_sync
+        # the fused iteration's summaries precision rung; None keeps the
+        # historical fused-secure_fit default (the f32-Gram kernel rung,
+        # converged-beta parity contract — see _fused_secure_iteration)
+        if summaries_backend is None:
+            summaries_backend = "pallas"
+        if summaries_backend not in SUMMARY_BACKENDS:
+            raise ValueError(
+                f"summaries_backend must be one of {SUMMARY_BACKENDS}"
+            )
+        self.summaries_backend = summaries_backend
         self.parts = list(parts)
         self.names = (list(names) if names is not None
                       else [f"inst{j}" for j in range(len(self.parts))])
@@ -425,6 +460,11 @@ class SecureFitDriver:
         self._midround_hooks: list[Callable[[], None]] = []
         self.key = jax.random.PRNGKey(seed)
         self.beta = jnp.zeros((self.dim,), dtype=jnp.float64)
+        # scan-mode rng slot counter: executed OR skipped scan slots both
+        # advance it, so round r's in-graph fold is fold_in(key, r)
+        # regardless of how the fit was cut into blocks (what makes
+        # mid-scan resume bit-identical to an uninterrupted run)
+        self._round_base = 0
         self.iteration = 0
         self.trace: list[float] = []
         self.reports: list[RoundReport] = []
@@ -502,6 +542,17 @@ class SecureFitDriver:
 
     # -- one Newton round ---------------------------------------------------
     def step(self) -> RoundReport:
+        if self.rounds == "scan":
+            # a supervised "round" in scan mode is one scan block: the
+            # supervisor's retry re-enters at the failed block (a raise
+            # below leaves ALL fit state unmutated, exactly like a failed
+            # per-round step)
+            reports = self.step_block()
+            if reports:
+                return reports[-1]
+            if self.reports:  # stepped past convergence: nothing executed
+                return self.reports[-1]
+            raise RuntimeError("scan block executed no rounds")
         # validate the round BEFORE mutating any fit state: a failed round
         # must leave iteration/trace/beta untouched (rng advances only once
         # shares have actually been cut)
@@ -636,15 +687,106 @@ class SecureFitDriver:
             self.beta, sub, packed.X, packed.X32, packed.y, packed.counts,
             self.lam, self.agg, self.protect, self.l1,
             self.agg.scheme.interpret, points=pts,
+            summaries_backend=self.summaries_backend,
         )
         # the one host sync per iteration
         return float(obj), lambda: beta_new
+
+    # -- scan-resident blocks ------------------------------------------------
+    def step_block(self, num_rounds: int | None = None
+                   ) -> list[RoundReport]:
+        """Up to ``num_rounds`` secure rounds as ONE ``lax.scan`` dispatch.
+
+        The whole block — protect, Algorithm 2 aggregation, reveal and
+        Newton update for every round, with the rng folded in-graph and
+        convergence freezing the carry — runs as a single jitted graph;
+        the only host sync is the block's (objective, active) trace
+        readback, from which the per-round ``RoundReport`` records are
+        reconstructed.  Default block length: ``rounds_per_sync``, or the
+        fit's whole remaining ``max_iter`` budget (one sync per fit).
+
+        The cohort and the live reveal points are frozen for the block
+        (liveness is a host-side notion; the graph never re-enters
+        Python), so supervision treats one block as one round: mid-round
+        hooks fire before dispatch, a below-threshold cohort raises with
+        ALL fit state unmutated, and the supervised retry re-enters at
+        this block with the same rng slots.
+        """
+        if self.rounds != "scan":
+            raise RuntimeError("step_block requires rounds='scan'")
+        from .scanfit import fit_scan_block
+
+        cohort = self.cohort_indices()
+        points = self.live_points()
+        parts = [self.parts[j] for j in cohort]
+        in_cohort = set(cohort)
+        stragglers = [
+            self.names[j] for j in range(len(self.parts))
+            if self.online[j] and j not in in_cohort
+        ]
+        num_live = None if points is None else len(points)
+        nbytes = _iteration_bytes(
+            self.dim, len(parts), self.protect, self.agg,
+            num_live_centers=num_live,
+        )
+        if num_rounds is None:
+            num_rounds = self.rounds_per_sync or max(
+                self.max_iter - self.iteration, 1
+            )
+        packed = pack_partitions(parts)
+        pts = self._post_protect_points(points)
+        if pts is not None and len(pts) == self.agg.scheme.num_shares:
+            pts = None  # the all-live first-t default (cache-friendly)
+        carry, objs, actives = fit_scan_block(
+            self.beta,
+            jnp.asarray(self._obj_prev, jnp.float64),
+            jnp.asarray(self.converged),
+            jnp.zeros((), jnp.int32),
+            self.key,
+            jnp.asarray(self._round_base, jnp.int32),
+            packed.X, packed.X32, packed.y, packed.counts, self.lam,
+            agg=self.agg, protect=self.protect, l1=self.l1,
+            tol=float(self.tol), interpret=self.agg.scheme.interpret,
+            points=pts, include_count=False,
+            summaries_backend=self.summaries_backend,
+            num_rounds=num_rounds, num_parts=len(parts),
+            max_rounds=num_rounds,
+        )
+        # ---- the block's one host sync: trace + carry readback
+        objs = np.asarray(objs)
+        actives = np.asarray(actives)
+        new_reports: list[RoundReport] = []
+        for r in range(num_rounds):
+            if not actives[r]:
+                break
+            self.iteration += 1
+            self.trace.append(float(objs[r]))
+            self.bytes_transmitted += nbytes
+            report = RoundReport(
+                self.iteration,
+                [self.names[j] for j in cohort],
+                stragglers,
+                list(points or ()),
+                float(objs[r]),
+                nbytes,
+            )
+            self.reports.append(report)
+            new_reports.append(report)
+        self.beta = carry[0]
+        self._obj_prev = float(carry[1])
+        self.converged = bool(carry[2])
+        self._round_base = int(carry[4])
+        return new_reports
 
     def run(self, max_iter: int | None = None) -> FitResult:
         limit = self.max_iter if max_iter is None else max_iter
         t_total = time.perf_counter()
         while not self.converged and self.iteration < limit:
-            self.step()
+            if self.rounds == "scan":
+                block = self.rounds_per_sync or (limit - self.iteration)
+                self.step_block(min(block, limit - self.iteration))
+            else:
+                self.step()
         self.total_seconds += time.perf_counter() - t_total
         return self.result()
 
@@ -673,6 +815,7 @@ class SecureFitDriver:
             "online": np.asarray(self.online),
             "latency": np.asarray(self.latency),
             "centers_online": np.asarray(self.centers_online),
+            "round_base": np.asarray(self._round_base),
         }
 
     def load_state_dict(self, state: dict):
@@ -689,6 +832,9 @@ class SecureFitDriver:
             self.latency = [float(v) for v in state["latency"]]
         if "centers_online" in state:
             self.centers_online = [bool(v) for v in state["centers_online"]]
+        # pre-scan checkpoints: executed rounds and consumed rng slots
+        # coincide in step mode, so iteration is the exact legacy value
+        self._round_base = int(state.get("round_base", state["iteration"]))
 
 
 def secure_fit(
@@ -701,6 +847,9 @@ def secure_fit(
     seed: int = 0,
     l1: float = 0.0,
     fused: bool | None = None,
+    rounds: str = "step",
+    rounds_per_sync: int | None = None,
+    summaries_backend: str | None = None,
 ) -> FitResult:
     """Paper Algorithm 1 over S institutions' (X_j, y_j) partitions.
 
@@ -715,6 +864,10 @@ def secure_fit(
     (the oracle).  Pass ``fused=False`` to force the loop path on any
     backend — that is the pre-fusion baseline the e2e benchmark times.
 
+    ``rounds="scan"`` runs the fit as scan-resident blocks of
+    ``rounds_per_sync`` fused rounds (None: the WHOLE fit as one
+    ``lax.scan`` — one host sync per fit); requires the fused path.
+
     This is the one-call form of ``SecureFitDriver`` (which adds stepwise
     execution, liveness hooks and ``state_dict`` crash-resume); a
     fault-free driver run is bit-identical to what this always produced.
@@ -722,5 +875,7 @@ def secure_fit(
     driver = SecureFitDriver(
         parts, lam=lam, tol=tol, max_iter=max_iter, protect=protect,
         aggregator=aggregator, seed=seed, l1=l1, fused=fused,
+        rounds=rounds, rounds_per_sync=rounds_per_sync,
+        summaries_backend=summaries_backend,
     )
     return driver.run()

@@ -174,6 +174,8 @@ class StudyCoordinator:
         seed: int = 0,
         fused: bool = False,
         summaries_backend: str | None = None,
+        rounds: str = "step",
+        rounds_per_sync: int | None = None,
     ):
         self.institutions = list(institutions)
         self.lam = lam
@@ -188,6 +190,18 @@ class StudyCoordinator:
                 "fused=False with backend='reference'"
             )
         self.fused = fused
+        if rounds not in ("step", "scan"):
+            raise ValueError("rounds must be 'step' or 'scan'")
+        if rounds == "scan" and not fused:
+            raise ValueError(
+                "rounds='scan' requires fused=True (the scan body IS the "
+                "fused cohort round); the loop path stays per-round"
+            )
+        if rounds_per_sync is not None and rounds_per_sync < 1:
+            raise ValueError("rounds_per_sync must be >= 1 (or None for "
+                             "one scan block per run)")
+        self.rounds = rounds
+        self.rounds_per_sync = rounds_per_sync
         # Precision ladder for the fused round's batched summaries.
         # "reference" (default) — f64, per-ROUND beta parity with the loop
         # oracle at the f64 rounding floor (well inside fixed-point
@@ -229,6 +243,9 @@ class StudyCoordinator:
         self.key = jax.random.PRNGKey(seed)
         d = self.institutions[0].X.shape[1]
         self.beta = jnp.zeros((d,), dtype=jnp.float64)
+        # scan-mode rng slot counter (executed or skipped slots both
+        # advance it — see core.scanfit): checkpointed for mid-scan resume
+        self._round_base = 0
         self.iteration = 0
         self.trace: list[float] = []
         self.reports: list[RoundReport] = []
@@ -332,6 +349,16 @@ class StudyCoordinator:
             raise ValueError(
                 "fused coordinator rounds require the pallas backend"
             )
+        if self.rounds == "scan" and use_fused:
+            # a supervised "round" in scan mode is one scan block; a raise
+            # inside leaves all round state unmutated, so retries re-enter
+            # at the failed block exactly like a failed per-round step
+            reports = self.step_block()
+            if reports:
+                return reports[-1]
+            if self.reports:  # stepped past convergence
+                return self.reports[-1]
+            raise RuntimeError("scan block executed no rounds")
         # Validate the round BEFORE mutating any state: a round that cannot
         # run (below quorum, below center threshold) must leave
         # iteration/trace/beta exactly as they were, so a supervised retry
@@ -458,6 +485,89 @@ class StudyCoordinator:
         # the one host sync of the round (same role as secure_fit's)
         return float(obj), lambda: beta_new
 
+    # -- scan-resident blocks --------------------------------------------------
+    def step_block(self, num_rounds: int | None = None
+                   ) -> list[RoundReport]:
+        """Up to ``num_rounds`` fused cohort rounds as ONE ``lax.scan``.
+
+        The deployment-shaped twin of ``SecureFitDriver.step_block``: the
+        whole block runs as a single jitted graph (in-graph rng folds,
+        ``should_stop``-driven freeze), with one host sync — the block's
+        trace readback — from which the per-round ``RoundReport`` records
+        are rebuilt through the same ``_finish_round`` bookkeeping the
+        per-round paths use.  The cohort and live centers are frozen for
+        the block; mid-round death hooks fire before dispatch (the fused
+        path's usual approximation — exact for the revealed values) and a
+        below-threshold block raises with all round state unmutated.
+        Default block length: ``rounds_per_sync``, or the remaining
+        ``run()`` budget (one sync per study).
+        """
+        if self.rounds != "scan":
+            raise RuntimeError("step_block requires rounds='scan'")
+        from .scanfit import fit_scan_block
+
+        cohort = self.cohort()
+        if self.protect != "none":
+            self.live_centers()
+        stragglers = [
+            i.name for i in self.institutions
+            if i.online and i not in cohort
+        ]
+        num_live = sum(1 for c in self.centers if c.online)
+        d = cohort[0].X.shape[1]
+        nbytes = _round_bytes(d, len(cohort), self.protect, self.agg,
+                              num_live)
+        if num_rounds is None:
+            # 50 is run()'s default max_iter — the whole-study budget
+            num_rounds = self.rounds_per_sync or max(50 - self.iteration, 1)
+        self._fire_midround_hooks()
+        if self.protect != "none":
+            points = tuple(c.index for c in self.live_centers())
+        else:
+            points = None
+        packed = pack_partitions([(i.X, i.y) for i in cohort])
+        carry, objs, actives = fit_scan_block(
+            self.beta,
+            jnp.asarray(self._obj_prev, jnp.float64),
+            jnp.asarray(self.converged),
+            jnp.zeros((), jnp.int32),
+            self.key,
+            jnp.asarray(self._round_base, jnp.int32),
+            packed.X, packed.X32, packed.y, packed.counts, self.lam,
+            agg=self.agg, protect=self.protect, l1=0.0,
+            tol=float(self.tol), interpret=self.agg.scheme.interpret,
+            points=points, include_count=True,
+            summaries_backend=self.summaries_backend,
+            num_rounds=num_rounds, num_parts=len(cohort),
+            max_rounds=num_rounds,
+        )
+        # ---- the block's one host sync: trace + carry readback
+        objs = np.asarray(objs)
+        actives = np.asarray(actives)
+        beta_final = carry[0]
+        obj_prev_final = float(carry[1])
+        converged_final = bool(carry[2])
+        new_reports: list[RoundReport] = []
+        for r in range(num_rounds):
+            if not actives[r]:
+                break
+            self.iteration += 1
+            self.trace.append(float(objs[r]))
+            new_reports.append(RoundReport(
+                self.iteration,
+                [i.name for i in cohort],
+                stragglers,
+                [c.index for c in self.centers if c.online],
+                float(objs[r]),
+                nbytes,
+            ))
+            self.reports.append(new_reports[-1])
+        self.beta = beta_final
+        self._obj_prev = obj_prev_final
+        self.converged = converged_final
+        self._round_base = int(carry[4])
+        return new_reports
+
     def _finish_round(self, obj, make_beta_new, cohort, stragglers,
                       nbytes) -> RoundReport:
         """Convergence bookkeeping shared verbatim by both round shapes.
@@ -486,7 +596,11 @@ class StudyCoordinator:
 
     def run(self, max_iter: int = 50) -> np.ndarray:
         while not self.converged and self.iteration < max_iter:
-            self.step()
+            if self.rounds == "scan" and self.fused:
+                block = self.rounds_per_sync or (max_iter - self.iteration)
+                self.step_block(min(block, max_iter - self.iteration))
+            else:
+                self.step()
         return np.asarray(self.beta)
 
     # -- checkpointing ----------------------------------------------------------
@@ -498,6 +612,7 @@ class StudyCoordinator:
             "trace": np.asarray(self.trace),
             "key": np.asarray(self.key),
             "converged": np.asarray(self.converged),
+            "round_base": np.asarray(self._round_base),
         }
 
     def load_state_dict(self, state: dict):
@@ -507,3 +622,5 @@ class StudyCoordinator:
         self.trace = [float(x) for x in state["trace"]]
         self.key = jnp.asarray(state["key"], dtype=jnp.uint32)
         self.converged = bool(state["converged"])
+        # pre-scan checkpoints: slots == executed rounds in step mode
+        self._round_base = int(state.get("round_base", state["iteration"]))

@@ -87,6 +87,7 @@ from .flatbuf import (
     pack_pytree,
     pack_pytree_batched,
     unpack_pytree,
+    unpack_pytree_tile,
 )
 from .shamir import ShamirScheme
 
@@ -96,11 +97,14 @@ __all__ = [
     "check_aggregation_headroom",
     "FlatProtected",
     "SecureAggregator",
+    "ShardedAggregate",
     "secure_psum",
     "REVEAL_MODES",
+    "OUT_MODES",
 ]
 
 REVEAL_MODES = ("replicated", "sharded")
+OUT_MODES = ("tree", "tile")
 
 
 def check_aggregation_headroom(num_addends: int, field: FieldSpec) -> None:
@@ -538,6 +542,51 @@ def _field_allreduce(shares, axis_name: str, field: FieldSpec,
     return (summed % field._bcast(summed, residue_axis)).astype(shares.dtype)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedAggregate:
+    """A revealed aggregate that STAYS sharded over the reduce axis.
+
+    ``secure_psum(reveal="sharded", out="tile")`` hands every device its
+    decoded ``(rows / D, 128)`` plaintext tile of the flat aggregate
+    buffer instead of all-gathering + unpacking.  Downstream code that
+    consumes the aggregate shard-wise (a distributed solve, a sharded
+    optimizer update) skips the gather entirely; anything that needs the
+    whole tree calls :meth:`gather` — which is exactly what
+    ``out="tree"`` would have done, so the two spellings are bit-equal.
+
+    Registered as a pytree with the tile as its only leaf (layout and
+    tile count are static aux data), so it crosses ``shard_map`` /
+    ``jit`` boundaries like a plain array.
+    """
+
+    tile: jnp.ndarray
+    layout: FlatLayout
+    num_tiles: int
+
+    def gather(self, axis_name: str, dtype=jnp.float32):
+        """All-gather the plaintext tiles and unpack the full pytree."""
+        flat = jax.lax.all_gather(self.tile, axis_name, axis=0, tiled=True)
+        return unpack_pytree(flat, self.layout, dtype=dtype)
+
+    def local_fragments(self, tile_index: int, dtype=None):
+        """Leaf fragments in THIS tile (static ``tile_index`` required).
+
+        See :func:`repro.core.flatbuf.unpack_pytree_tile` for the
+        ``{leaf: (start, stop, fragment)}`` contract.
+        """
+        return unpack_pytree_tile(
+            self.tile, self.layout, tile_index, self.num_tiles, dtype=dtype
+        )
+
+    def tree_flatten(self):
+        return (self.tile,), (self.layout, self.num_tiles)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], *aux)
+
+
 def _secure_psum_per_leaf(tree, axis_name: str, key: jax.Array,
                           agg: SecureAggregator, points: tuple[int, ...],
                           dtype):
@@ -561,7 +610,8 @@ def _secure_psum_per_leaf(tree, axis_name: str, key: jax.Array,
 def secure_psum(tree, axis_name: str, key: jax.Array,
                 aggregator: SecureAggregator | None = None,
                 dtype=jnp.float32, reveal: str = "replicated",
-                points: Sequence[int] | None = None):
+                points: Sequence[int] | None = None,
+                out: str = "tree"):
     """Secret-shared all-reduce over a mesh axis (SPMD Algorithm 1, 11-13).
 
     Per device: pack the local float tree into ONE flat (rows, 128) tile
@@ -588,6 +638,15 @@ def secure_psum(tree, axis_name: str, key: jax.Array,
       twice, cutting the all-reduce payload roughly in half (the gathered
       plaintext is ``dtype``-sized, far smaller than the share buffer).
 
+    ``out`` selects the return shape of the sharded reveal:
+
+    * ``"tree"`` (default) — all-gather the decoded tiles and unpack the
+      full float pytree on every device (the historical behavior).
+    * ``"tile"`` — skip the gather: return a :class:`ShardedAggregate`
+      whose ``tile`` leaf is this device's decoded plaintext row-tile.
+      ``.gather(axis_name)`` reproduces ``out="tree"`` bit-exactly;
+      shard-wise consumers never pay for the assembled tree.
+
     Passing ``aggregator=SecureAggregator(backend="reference")`` selects
     the original per-leaf uint64 wire (replicated reveal only) — the
     bit-exactness oracle.  Cryptographically, both modes only ever
@@ -598,6 +657,13 @@ def secure_psum(tree, axis_name: str, key: jax.Array,
     agg = aggregator or SecureAggregator(backend="pallas")
     if reveal not in REVEAL_MODES:
         raise ValueError(f"reveal must be one of {REVEAL_MODES}")
+    if out not in OUT_MODES:
+        raise ValueError(f"out must be one of {OUT_MODES}")
+    if out == "tile" and reveal != "sharded":
+        raise ValueError(
+            "out='tile' only makes sense with reveal='sharded' — the "
+            "replicated reveal already holds the full aggregate everywhere"
+        )
     pts = agg._validated_points(points)
     num_devices = _compat_axis_size(axis_name)
     check_aggregation_headroom(num_devices, agg.scheme.field)
@@ -640,5 +706,7 @@ def secure_psum(tree, axis_name: str, key: jax.Array,
     flat_tile = _reveal_flat(
         tile, agg.scheme, agg.codec.frac_bits, pts
     ).astype(dtype)  # decode locally, gather plaintext (dtype-sized)
+    if out == "tile":
+        return ShardedAggregate(flat_tile, layout, num_devices)
     flat = jax.lax.all_gather(flat_tile, axis_name, axis=0, tiled=True)
     return unpack_pytree(flat, layout, dtype=dtype)

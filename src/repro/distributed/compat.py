@@ -43,8 +43,9 @@ def axis_size(axis_name: str) -> int:
     Modern jax spells this ``jax.lax.axis_size``; on 0.4.x the equivalent
     is ``lax.psum(1, axis)``, which is evaluated eagerly for non-tracer
     operands and returns a Python int.  Callers rely on the result being
-    static (it sizes reduce-scatter tiles and exact-sum overflow guards),
-    so both spellings resolve at trace time.
+    static (it sizes reduce-scatter tiles, exact-sum overflow guards, and
+    the 2D-mesh share-axis checks in ``distributed.multihost``), so both
+    spellings resolve at trace time.
     """
     fn = getattr(jax.lax, "axis_size", None)
     if fn is not None:

@@ -23,11 +23,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["MeshRules", "POD_AXIS", "param_pspec", "param_shardings"]
+__all__ = ["MeshRules", "POD_AXIS", "SHARE_AXIS", "param_pspec",
+           "param_shardings"]
 
 # The institution axis: one paper party per pod.  secure_psum's share
 # reductions (and the sharded reveal's reduce-scatter) run over this axis.
 POD_AXIS = "pod"
+
+# The computation-center axis of the 2D (pod, share) mesh
+# (``distributed.multihost``): reveal point j lives on mesh column j, so a
+# center-device only ever holds its own share slice and reconstruction is
+# a psum of Lagrange-weighted slices over this axis.  Orthogonal to
+# POD_AXIS.
+SHARE_AXIS = "share"
 
 
 @dataclasses.dataclass(frozen=True)

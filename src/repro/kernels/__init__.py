@@ -10,6 +10,6 @@ The secure-aggregation pipeline is fully kernelized: ``shamir_poly``
 to end over flat (rows, 128) tile buffers — see ``core.secure_agg`` for
 the backend switch that routes production traffic through them.
 """
-from . import ops, ref
+from . import ops, ref, tuning
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "tuning"]

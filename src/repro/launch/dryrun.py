@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the first two lines: jax locks the device count on first init.
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this script jits the real entry point (train_step /
@@ -21,9 +18,12 @@ Usage:
 """
 import argparse
 import json
+import os
 import subprocess
 import sys
 import time
+
+from repro.distributed.xla_flags import apply_xla_flags
 
 
 def parse_args(argv=None):
@@ -59,10 +59,11 @@ def parse_args(argv=None):
 
 
 ARGS = parse_args()
-if ARGS.host_devices != 512:
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={ARGS.host_devices}"
-    )
+# ONE validated flag write, before the first jax use: apply_xla_flags
+# raises if a backend already locked the device count (the old two-write
+# shape set a module-level default and then silently overwrote it after
+# parse_args, trusting nothing had initialized jax in between).
+apply_xla_flags(host_device_count=ARGS.host_devices)
 
 import jax  # noqa: E402  (after XLA_FLAGS)
 import jax.numpy as jnp  # noqa: E402

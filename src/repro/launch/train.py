@@ -52,6 +52,16 @@ def parse_args(argv=None):
                     help="row-count scale for quick runs")
     ap.add_argument("--centers", type=int, default=3)
     ap.add_argument("--threshold", type=int, default=2)
+    ap.add_argument("--rounds", default="step", choices=["step", "scan"],
+                    help="round execution for the secure fit: 'step' "
+                         "re-enters Python every Newton round; 'scan' runs "
+                         "whole blocks of rounds as ONE lax.scan — one host "
+                         "sync per block (requires --fused)")
+    ap.add_argument("--rounds-per-sync", type=int, default=None,
+                    metavar="K",
+                    help="scan block size: K rounds per host sync (default "
+                         "None = the whole fit as one block; smaller blocks "
+                         "let the fault supervisor and checkpoints cut in)")
     ap.add_argument("--fused", action="store_true",
                     help="cohort-level batched coordinator rounds (pallas "
                          "backend); per-round parity with the loop oracle "
@@ -185,7 +195,8 @@ def run_logreg(args) -> dict:
     coord = StudyCoordinator(
         insts, lam=args.lam, protect=args.protect, aggregator=agg,
         deadline=args.deadline, tol=args.tol, seed=args.seed,
-        fused=args.fused,
+        fused=args.fused, rounds=args.rounds,
+        rounds_per_sync=args.rounds_per_sync,
     )
 
     ckpt = None

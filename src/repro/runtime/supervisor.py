@@ -349,6 +349,17 @@ class RoundSupervisor:
     no wall-clock, no randomness — so a given (driver seed, schedule,
     policy) triple always produces the same betas, the same retry
     counts, and the same backoff times.
+
+    Scan-resident drivers (``rounds="scan"``): one supervised round is
+    one SCAN BLOCK of ``rounds_per_sync`` Newton rounds — the driver's
+    ``step()`` dispatches the whole block as a single graph, so chaos
+    events land at block boundaries (a ``center_midround`` hook fires at
+    the block's dispatch) and ``max_rounds`` caps blocks, not Newton
+    rounds.  A failed block mutates no driver state, so the retry
+    re-enters at the SAME block; the in-graph rng folds ``(key, round)``
+    by absolute round index, which makes the retried block — and any
+    post-crash ``state_dict`` resume — bit-identical to an
+    uninterrupted run (``tests/test_scan_rounds.py`` pins both).
     """
 
     def __init__(

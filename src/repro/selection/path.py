@@ -60,6 +60,7 @@ from ..core.newton import (
     regularized_objective,
     should_stop,
 )
+from ..core.scanfit import scan_rounds
 from ..core.secure_agg import SecureAggregator
 from .folds import assign_folds, pack_fold_ids
 from .report import PathReport, one_se_rule
@@ -170,14 +171,13 @@ def _cv_sweep_block(betas, obj_prev, converged, iters, vdev, vcorr, vcnt,
                  slot + 1),
                 (obj_prev, jnp.zeros_like(converged)))
 
-    def body(carry, _):
-        settled = jnp.all(carry[2] | (carry[3] >= max_rounds))
-        return jax.lax.cond(settled, skip_fn, round_fn, carry)
+    def settled(carry):
+        return jnp.all(carry[2] | (carry[3] >= max_rounds))
 
     carry0 = (betas, obj_prev, converged, iters, vdev, vcorr, vcnt,
               round_base)
-    carry, (objs, actives) = jax.lax.scan(
-        body, carry0, None, length=num_rounds
+    carry, (objs, actives) = scan_rounds(
+        round_fn, skip_fn, settled, carry0, num_rounds
     )
     return carry, objs, actives
 

@@ -1,0 +1,198 @@
+"""Whole-fit scan residency: the scanned drivers vs the per-round oracles.
+
+The load-bearing claim (``core/scanfit.py``): revealed aggregates are
+exactly rng-independent — Shamir reconstruction cancels the sharing
+polynomials in the field — so the scanned round graph (one in-graph
+``fold_in`` rng stream, one host sync per block) must reproduce the
+per-round drivers BIT-identically on the f64 rung, and within fixed-point
+quantization on the f32-Gram rungs.  Block cutting and mid-scan
+``state_dict`` resume must be invisible: the slot counter advances on
+skipped slots too, so executed round r always folds ``(key, r)``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    Institution,
+    SecureAggregator,
+    SecureFitDriver,
+    StudyCoordinator,
+    secure_fit,
+)
+from repro.data import generate_synthetic
+from repro.runtime import FailureInjector, FaultPolicy, RoundSupervisor
+
+NUM_INST = 4
+
+
+@pytest.fixture(scope="module")
+def study():
+    return generate_synthetic(
+        jax.random.PRNGKey(3), num_institutions=NUM_INST,
+        records_per_institution=150, dim=5,
+    )
+
+
+@pytest.fixture(scope="module")
+def agg():
+    return SecureAggregator(backend="pallas")
+
+
+def quant_tol(agg):
+    return (NUM_INST + 1) / agg.codec.scale
+
+
+# --------------------------------------------------------- driver lockstep
+
+@pytest.mark.parametrize("protect", ["none", "gradient", "both"])
+def test_scan_fit_matches_per_round_oracle(study, agg, protect):
+    """scan == per-round fused: same round count, convergence flag, and
+    beta/trace — bitwise, because the revealed aggregates do not depend
+    on the rng scheme (host split vs in-graph fold_in)."""
+    ref = secure_fit(study.parts, lam=1.0, protect=protect,
+                     aggregator=agg, fused=True)
+    scan = secure_fit(study.parts, lam=1.0, protect=protect,
+                      aggregator=agg, fused=True, rounds="scan")
+    assert scan.iterations == ref.iterations
+    assert scan.converged == ref.converged
+    np.testing.assert_array_equal(np.asarray(scan.beta),
+                                  np.asarray(ref.beta))
+    assert scan.deviance_trace == ref.deviance_trace
+
+
+@pytest.mark.parametrize("backend", ["reference", "mixed", "pallas"])
+def test_scan_fit_precision_rungs(study, agg, backend):
+    """Every summaries rung: the scanned fit tracks the per-round fit at
+    the SAME rung.  f64 reference is bit-exact per round; the f32-Gram
+    rungs are converged-beta-parity (quantization tolerance), matching
+    the rung contract of the per-round drivers."""
+    kw = dict(lam=1.0, protect="both", aggregator=agg, fused=True,
+              summaries_backend=backend)
+    ref = secure_fit(study.parts, **kw)
+    scan = secure_fit(study.parts, rounds="scan", **kw)
+    assert scan.iterations == ref.iterations
+    err = np.abs(np.asarray(scan.beta) - np.asarray(ref.beta)).max()
+    if backend == "reference":
+        assert err == 0.0
+    else:
+        assert err <= quant_tol(agg)
+
+
+def test_blocked_scan_bit_identical_to_whole_fit(study, agg):
+    """Cutting the fit into rounds_per_sync blocks must not move a bit:
+    the rng fold of executed round r is (key, r) under any block size."""
+    whole = secure_fit(study.parts, lam=1.0, protect="both",
+                       aggregator=agg, fused=True, rounds="scan")
+    for block in (1, 2, 3):
+        cut = secure_fit(study.parts, lam=1.0, protect="both",
+                         aggregator=agg, fused=True, rounds="scan",
+                         rounds_per_sync=block)
+        np.testing.assert_array_equal(np.asarray(cut.beta),
+                                      np.asarray(whole.beta))
+        assert cut.deviance_trace == whole.deviance_trace
+        assert cut.iterations == whole.iterations
+
+
+def test_mid_scan_state_dict_resume_bit_identical(study, agg):
+    """Save after one scan block, restore into a FRESH driver, finish:
+    beta and trace equal the uninterrupted run exactly."""
+    def make():
+        return SecureFitDriver(study.parts, lam=1.0, protect="both",
+                               aggregator=agg, fused=True, rounds="scan",
+                               rounds_per_sync=2)
+
+    d1 = make()
+    d1.step_block()
+    saved = d1.state_dict()
+    d1.run()
+
+    d2 = make()
+    d2.load_state_dict(saved)
+    d2.run()
+    np.testing.assert_array_equal(np.asarray(d1.beta), np.asarray(d2.beta))
+    assert d1.trace == d2.trace
+    assert d1.iteration == d2.iteration
+
+
+def test_scan_requires_fused_and_validates_block(study, agg):
+    with pytest.raises(ValueError, match="fused"):
+        SecureFitDriver(study.parts, lam=1.0, fused=False, rounds="scan")
+    with pytest.raises(ValueError, match="rounds"):
+        SecureFitDriver(study.parts, lam=1.0, fused=True,
+                        aggregator=agg, rounds="sscan")
+    with pytest.raises(ValueError, match="rounds_per_sync"):
+        SecureFitDriver(study.parts, lam=1.0, fused=True, aggregator=agg,
+                        rounds="scan", rounds_per_sync=0)
+
+
+# ------------------------------------------------------- coordinator path
+
+def _make_coordinator(study, agg, **kw):
+    insts = [Institution(f"i{j}", X, y)
+             for j, (X, y) in enumerate(study.parts)]
+    return StudyCoordinator(insts, lam=1.0, protect="both",
+                            aggregator=agg, seed=0, fused=True, **kw)
+
+
+def test_coordinator_scan_matches_per_round(study, agg):
+    """StudyCoordinator(rounds="scan"): same rounds, one report per
+    executed round with the per-round byte accounting, bit-equal beta."""
+    ref = _make_coordinator(study, agg)
+    ref.run()
+    scan = _make_coordinator(study, agg, rounds="scan")
+    scan.run()
+    assert scan.iteration == ref.iteration
+    assert len(scan.reports) == scan.iteration
+    np.testing.assert_array_equal(np.asarray(scan.beta),
+                                  np.asarray(ref.beta))
+    for a, b in zip(ref.reports, scan.reports):
+        assert a.bytes_transmitted == b.bytes_transmitted
+        assert a.responders == b.responders
+        assert a.centers_used == b.centers_used
+
+
+# ------------------------------------------------- supervised scan blocks
+
+def test_supervised_scan_blocks_match_fault_free_oracle(study, agg):
+    """A supervised scan-mode fit with a center dying INSIDE a scan block
+    (midround hook at block dispatch) converges to the fault-free
+    per-round oracle bitwise — any >= t reveal points reconstruct the
+    same field element, whole-block or per-round."""
+    oracle = secure_fit(study.parts, lam=1.0, protect="both",
+                        aggregator=agg, fused=True)
+
+    def make_scan_driver():
+        return SecureFitDriver(
+            study.parts, lam=1.0, protect="both", aggregator=agg,
+            names=[f"i{j}" for j in range(NUM_INST)],
+            fused=True, rounds="scan", rounds_per_sync=2,
+        )
+
+    drv = make_scan_driver()
+    sup = RoundSupervisor(
+        drv, policy=FaultPolicy(max_retries=4),
+        injector=FailureInjector({
+            1: [("center_midround", 1)],
+            2: [("center_crash", 2)], 3: [("center_recover", 2)],
+        }),
+    )
+    sup.run(max_rounds=40)
+    assert drv.converged
+    np.testing.assert_array_equal(np.asarray(drv.beta),
+                                  np.asarray(oracle.beta))
+
+    # supervisor retry re-enters at the failed block: crash a center
+    # below quorum mid-schedule and let it recover; the fit still lands
+    drv2 = make_scan_driver()
+    sup2 = RoundSupervisor(
+        drv2, policy=FaultPolicy(max_retries=6),
+        injector=FailureInjector({
+            2: [("center_crash", 1), ("center_crash", 2)],
+            3: [("center_recover", 1), ("center_recover", 2)],
+        }),
+    )
+    sup2.run(max_rounds=40)
+    assert drv2.converged
+    err = np.abs(np.asarray(drv2.beta) - np.asarray(oracle.beta)).max()
+    assert err <= quant_tol(agg)
