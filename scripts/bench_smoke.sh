@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Standing perf/correctness gate for the secure-aggregation hot path.
 #
-# Runs tier-1 tests, then a small-size secure_overhead smoke with BOTH
+# Runs tier-1 tests, the static privacy gate (scripts/static_checks.sh:
+# jaxpr taint verification of every secure driver + protocol lints +
+# leak-fixture negative controls), then a small-size secure_overhead
+# smoke with BOTH
 # backends and asserts (a) revealed-sum exactness on every row and (b) the
 # fused Pallas pipeline is not slower than the reference oracle.  Then
 # runs the e2e fused-Newton smoke (--quick) and asserts secure ==
@@ -25,6 +28,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
+
+echo "== static privacy gate (taint verifier + protocol lints) =="
+scripts/static_checks.sh
 
 echo "== secure_overhead smoke (both backends) =="
 python benchmarks/secure_overhead.py \

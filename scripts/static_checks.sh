@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Standing static privacy gate: taint-verify every secure driver graph,
+# run the protocol lints (one-host-sync-per-block, fixed-point headroom,
+# mesh axes, Pallas VMEM knobs), then confirm the deliberately-leaky
+# fixtures are CAUGHT.  Pure tracing + AST + arithmetic — no kernel
+# executes, so the whole gate runs in seconds.
+#
+#   scripts/static_checks.sh [--verbose] [--json] [--drivers SUBSTR]
+#
+# Exit status 0 iff every driver certifies clean AND every leak fixture
+# produces an error finding.  See benchmarks/README.md ("Static checks")
+# for what each pass proves and how to annotate an intentional
+# declassification.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m repro.analysis "$@"

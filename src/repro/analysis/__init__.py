@@ -1,0 +1,48 @@
+"""Static privacy-flow verifier + protocol lints: the standing gate.
+
+Nothing in here executes a kernel or moves real data — every pass works
+on traced jaxprs (``jax.make_jaxpr`` over tiny synthetic shapes, SPMD
+graphs through ``AbstractMesh``), on Python ASTs, or on pure
+configuration arithmetic.  Run the whole gate with::
+
+    PYTHONPATH=src python -m repro.analysis
+
+Module map:
+
+* ``taint``    — the jaxpr taint verifier: institution-local inputs are
+  SECRET, the encode+share kernel produces PROTECTED share buffers,
+  Algorithm 2 (institution-axis / pod-axis sums) upgrades them to
+  PROTECTED_AGG, and the threshold Lagrange reveal (or an annotated
+  ``declassify_sum``) is the only transition back to PUBLIC.  SECRET or
+  share material reaching an output, a host callback, or a reveal in the
+  wrong state is an error.
+* ``lints``    — the protocol lints: one-host-sync-per-block AST pass
+  over the scan drivers, callback census of the round graphs, symbolic
+  fixed-point headroom proof from config bounds, mesh-axis allowlist,
+  and the Pallas VMEM knob check (``kernels.tuning`` model, no
+  compilation).
+* ``drivers``  — the certified surface: ``DriverSpec`` builders tracing
+  every secure driver round (fused, scan, selection sweep, 1D/2D SPMD
+  ``secure_psum``) with the taint labels of their inputs.
+* ``fixtures`` — deliberately-leaky driver variants the gate must FAIL
+  on (negative controls, run by the CLI on every invocation).
+* ``report``   — ``Finding``/``AnalysisReport`` records shared by all
+  passes, with the declassification audit trail.
+* ``__main__`` — the CLI gate: verifies every driver spec, runs the
+  lints, then the leak fixtures; exit status 0 only if all drivers are
+  clean AND every fixture is caught.
+"""
+from .report import AnalysisReport, Finding
+from .taint import (PROTECTED, PROTECTED_AGG, PUBLIC, SECRET, iter_eqns,
+                    verify_jaxpr)
+
+__all__ = [
+    "AnalysisReport",
+    "Finding",
+    "PUBLIC",
+    "PROTECTED_AGG",
+    "PROTECTED",
+    "SECRET",
+    "verify_jaxpr",
+    "iter_eqns",
+]

@@ -1,0 +1,123 @@
+"""The standing static gate: ``python -m repro.analysis``.
+
+Runs, in order:
+
+1. the taint verifier + per-graph lints (callback census, mesh axes)
+   over every certified driver spec (``drivers.all_driver_specs``),
+2. the source-level and config-level lints (host-sync AST pass,
+   fixed-point headroom proof, Pallas knob check),
+3. the leak fixtures (``fixtures.leak_fixture_specs``) — deliberately
+   broken drivers the verifier MUST flag; a fixture passing clean means
+   the gate itself regressed.
+
+Exit status 0 iff every driver/lint report is clean AND every fixture
+is caught.  ``--verbose`` shows info findings and the declassification
+audit trail; ``--json`` emits machine-readable reports; ``--drivers``
+filters specs by substring (fixtures still run unless
+``--no-fixtures``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _analyze_spec(spec, *, expect_leak: bool = False):
+    from .lints import lint_mesh_axes, lint_no_callbacks
+    from .report import AnalysisReport
+    from .taint import verify_jaxpr
+
+    closed, taints = spec.build()
+    report = AnalysisReport(target=spec.name)
+    verify_jaxpr(closed, taints, spec.threshold,
+                 axis_sizes=spec.axis_sizes, target=spec.name,
+                 report=report)
+    if not expect_leak:
+        # leak fixtures get taint-only treatment: the callback fixture
+        # *should* trip the census too, but the taint finding is the one
+        # the negative control pins
+        lint_no_callbacks(closed, spec.name, report)
+        lint_mesh_axes(closed, spec.name, report)
+    return report
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="privacy-flow taint verifier + protocol lints",
+    )
+    parser.add_argument("--drivers", default="",
+                        help="only run driver specs containing SUBSTR")
+    parser.add_argument("--verbose", action="store_true",
+                        help="show info findings + declassification trail")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit reports as JSON")
+    parser.add_argument("--no-fixtures", action="store_true",
+                        help="skip the leak-fixture negative controls")
+    args = parser.parse_args(argv)
+
+    from .drivers import all_driver_specs
+    from .fixtures import leak_fixture_specs
+    from .lints import (SummaryBounds, lint_headroom, lint_host_sync,
+                        lint_kernel_knobs)
+
+    reports = []
+    failed = False
+
+    specs = [s for s in all_driver_specs() if args.drivers in s.name]
+    for spec in specs:
+        rep = _analyze_spec(spec)
+        reports.append(rep)
+        failed |= not rep.ok
+
+    if not args.drivers:
+        reports.append(lint_host_sync())
+        # deployment-shaped bounds: lane-aligned d, benchmark-scale rows,
+        # a full cohort — the envelope every shipped config sits inside
+        reports.append(lint_headroom(
+            SummaryBounds(d=128, n_max=100_000, num_parts=16)
+        ))
+        reports.append(lint_kernel_knobs())
+        failed |= not all(r.ok for r in reports[-3:])
+
+    caught = []
+    if not args.no_fixtures:
+        for spec in leak_fixture_specs():
+            rep = _analyze_spec(spec, expect_leak=True)
+            if rep.ok:
+                failed = True
+                caught.append((rep, False))
+            else:
+                caught.append((rep, True))
+
+    if args.as_json:
+        payload = {
+            "reports": [r.to_dict() for r in reports],
+            "fixtures": [
+                {"caught": was_caught, **r.to_dict()}
+                for r, was_caught in caught
+            ],
+            "ok": not failed,
+        }
+        print(json.dumps(payload, indent=2))
+        return 1 if failed else 0
+
+    for rep in reports:
+        print(rep.format(verbose=args.verbose))
+    for rep, was_caught in caught:
+        if was_caught:
+            errs = rep.errors()
+            print(f"CAUGHT  {rep.target} ({len(errs)} error finding(s))")
+            for f in errs if args.verbose else errs[:1]:
+                print(f"  {f.format()}")
+        else:
+            print(f"MISSED  {rep.target} — the leak fixture passed the "
+                  "gate: the verifier has regressed")
+    print(f"\ngate: {'FAIL' if failed else 'PASS'} "
+          f"({len(specs)} drivers, {len(caught)} fixtures)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,460 @@
+"""Protocol lints: the static twins of the runtime protocol invariants.
+
+Four passes, each producing :class:`~repro.analysis.report.Finding`
+records (see ``report.py``):
+
+* :func:`lint_host_sync` — AST pass pinning "ONE host sync per scan
+  block" over the three scan drivers.  Values bound from a round
+  dispatch (``fit_scan_block`` / ``_cv_sweep_block`` /
+  ``_fused_secure_iteration``) are device-resident; materializing one on
+  the host (``float``/``int``/``bool``/``np.asarray``/``.item()``/
+  ``jax.device_get``) is a sync.  Each monitored function must contain
+  exactly ONE sync site, annotated with a ``# host-sync:`` comment;
+  every unannotated materialization of a device value is a violation.
+  ``jax.device_get`` rebinding names to the host side is tracked, so
+  bookkeeping on already-fetched values stays clean.
+* :func:`lint_no_callbacks` — jaxpr census: a scan-resident round graph
+  must contain ZERO host-callback equations (a callback inside the scan
+  body is a hidden per-round sync AND a telemetry channel).
+* :func:`lint_headroom` — symbolic fixed-point pass: from configuration
+  bounds alone (:class:`SummaryBounds`), prove the two overflow
+  invariants the runtime asserts dynamically — the CRT aggregation bound
+  ``S * max(p_r) < 2**64`` (``check_aggregation_headroom``'s static
+  twin) and the codec capacity bound ``S * max|summary| < capacity``
+  (``SecureAggregator.headroom_ok``'s static twin).
+* :func:`lint_mesh_axes` — every collective axis in a traced graph must
+  be one of the protocol's named mesh axes (``POD_AXIS``/``SHARE_AXIS``)
+  and bound by the enclosing ``shard_map`` mesh.
+* :func:`lint_kernel_knobs` — the compiled-path Pallas blocking knobs
+  checked against the ``kernels.tuning`` VMEM working-set model at the
+  gate's dims, without compiling anything.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import math
+import pathlib
+
+from .report import AnalysisReport, Finding
+from .taint import CALLBACK_PRIMS, iter_eqns
+
+__all__ = [
+    "MONITORED_DRIVERS",
+    "SYNC_MARK",
+    "SummaryBounds",
+    "lint_host_sync",
+    "lint_no_callbacks",
+    "lint_headroom",
+    "lint_mesh_axes",
+    "lint_kernel_knobs",
+]
+
+
+# -- host-sync lint --------------------------------------------------------
+
+SYNC_MARK = "# host-sync:"
+
+# round-dispatch callables: binding their result makes a name device-resident
+DISPATCH_FNS = {"fit_scan_block", "_cv_sweep_block", "_fused_secure_iteration"}
+
+# module path (relative to the repro package) -> monitored driver methods
+MONITORED_DRIVERS = (
+    ("core/newton.py", "SecureFitDriver", ("_round_fused", "step_block")),
+    ("core/protocol.py", "StudyCoordinator",
+     ("_round_fused", "step_block")),
+    ("selection/path.py", "PathDriver", ("run_chunk",)),
+)
+
+_SCALAR_MATERIALIZERS = {"float", "int", "bool"}
+_MODULE_MATERIALIZERS = {
+    ("np", "asarray"), ("np", "array"), ("numpy", "asarray"),
+    ("numpy", "array"),
+    ("jax", "device_get"), ("jax", "block_until_ready"),
+}
+# marker comment must sit within this many lines above the sync call
+_MARK_WINDOW = 5
+
+
+def _materializer_kind(call: ast.Call):
+    f = call.func
+    if isinstance(f, ast.Name) and f.id in _SCALAR_MATERIALIZERS:
+        return f.id
+    if isinstance(f, ast.Attribute):
+        if isinstance(f.value, ast.Name) and \
+                (f.value.id, f.attr) in _MODULE_MATERIALIZERS:
+            return f"{f.value.id}.{f.attr}"
+        if f.attr == "item" and not call.args and not call.keywords:
+            return ".item()"
+    return None
+
+
+def _is_intrinsic_sync(kind: str) -> bool:
+    """device_get/block_until_ready sync regardless of argument taint."""
+    return kind in ("jax.device_get", "jax.block_until_ready")
+
+
+def _arg_names(call: ast.Call):
+    names = set()
+    for sub in call.args + [kw.value for kw in call.keywords]:
+        for n in ast.walk(sub):
+            if isinstance(n, ast.Name):
+                names.add(n.id)
+    return names
+
+
+def _call_callee(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _target_names(stmt):
+    targets = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+    names = []
+    for t in targets:
+        if isinstance(t, ast.Name):
+            names.append(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            names.extend(e.id for e in t.elts if isinstance(e, ast.Name))
+    return names
+
+
+def _own_calls(stmt: ast.stmt):
+    """Call nodes in this statement's own expressions, NOT in nested
+    statements (compound statements would otherwise re-yield their
+    bodies' calls)."""
+    out = []
+
+    def rec(node):
+        for ch in ast.iter_child_nodes(node):
+            if isinstance(ch, ast.stmt):
+                continue
+            if isinstance(ch, ast.Call):
+                out.append(ch)
+            rec(ch)
+
+    rec(stmt)
+    return out
+
+
+def _find_function(tree: ast.Module, cls: str, fn: str):
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == cls:
+            for sub in node.body:
+                if isinstance(sub, ast.FunctionDef) and sub.name == fn:
+                    return sub
+    return None
+
+
+def _lint_function(fn_node: ast.FunctionDef, mark_lines: set, where: str,
+                   report: AnalysisReport):
+    """One monitored driver method: exactly one marked sync, no strays."""
+    stmts = sorted(
+        (n for n in ast.walk(fn_node) if isinstance(n, ast.stmt)),
+        key=lambda n: (n.lineno, n.col_offset),
+    )
+    device: set = set()
+    candidates = []  # (lineno, site) of every device materialization
+
+    for stmt in stmts:
+        # phase 1: check every materializer call inside this statement
+        # against the CURRENT device set (binding applies afterwards)
+        for call in _own_calls(stmt):
+            kind = _materializer_kind(call)
+            if kind is None:
+                continue
+            touched = _arg_names(call) & device
+            if _is_intrinsic_sync(kind) or touched:
+                site = f"{where}:{call.lineno} {kind}"
+                if touched:
+                    site += f"({', '.join(sorted(touched))})"
+                candidates.append((call.lineno, site))
+        # phase 2: binding effects, in source order
+        if isinstance(stmt, (ast.Assign, ast.AugAssign)):
+            calls = [c for c in ast.walk(stmt.value)
+                     if isinstance(c, ast.Call)]
+            names = _target_names(stmt)
+            if any(_call_callee(c) == "device_get" for c in calls):
+                device.difference_update(names)  # fetched -> host side
+            elif any(_call_callee(c) in DISPATCH_FNS for c in calls):
+                device.update(names)
+            elif any(isinstance(n, ast.Name) and n.id in device
+                     for n in ast.walk(stmt.value)):
+                device.update(names)  # derived from a device value
+
+    # a marker blesses only the FIRST materialization at/after it (within
+    # the window) — trailing reads can't ride an earlier annotation
+    candidates.sort()
+    blessed = set()
+    for m in sorted(mark_lines):
+        for idx, (lineno, _) in enumerate(candidates):
+            if idx not in blessed and m <= lineno <= m + _MARK_WINDOW:
+                blessed.add(idx)
+                break
+    syncs = [site for idx, (_, site) in enumerate(candidates)
+             if idx in blessed]
+    for idx, (_, site) in enumerate(candidates):
+        if idx not in blessed:
+            report.add(Finding(
+                "host-sync", "error", site,
+                "unannotated host materialization of a device-resident "
+                "round value — a hidden sync (mark the ONE intended "
+                f"site with '{SYNC_MARK}' or keep the value on device)",
+            ))
+
+    if len(syncs) == 1:
+        report.add(Finding(
+            "host-sync", "info", syncs[0],
+            "the one marked host sync of this driver block",
+        ))
+    elif not syncs:
+        report.add(Finding(
+            "host-sync", "error", where,
+            f"no marked host-sync site found (expected exactly one "
+            f"'{SYNC_MARK}'-annotated readback)",
+        ))
+    else:
+        report.add(Finding(
+            "host-sync", "error", where,
+            f"{len(syncs)} marked host-sync sites ({'; '.join(syncs)}): "
+            "a scan driver block must sync exactly once",
+        ))
+
+
+def lint_host_sync(report: AnalysisReport | None = None, *,
+                   modules=None) -> AnalysisReport:
+    """Pin "one host sync per scan block" over the driver sources.
+
+    ``modules`` (for tests/fixtures) maps a display name to
+    ``(source_text, [(class_name, fn_name), ...])``; default is the real
+    monitored driver set read from the package sources.
+    """
+    rep = report or AnalysisReport(target="host-sync")
+    if modules is None:
+        pkg = pathlib.Path(__file__).resolve().parents[1]
+        modules = {}
+        for rel, cls, fns in MONITORED_DRIVERS:
+            src = (pkg / rel).read_text()
+            modules[rel] = (src, [(cls, fn) for fn in fns])
+    for name, (src, targets) in modules.items():
+        tree = ast.parse(src)
+        mark_lines = {
+            i for i, line in enumerate(src.splitlines(), start=1)
+            if SYNC_MARK in line
+        }
+        for cls, fn in targets:
+            node = _find_function(tree, cls, fn)
+            if node is None:
+                rep.add(Finding(
+                    "host-sync", "error", f"{name}:{cls}.{fn}",
+                    "monitored driver method not found — update "
+                    "MONITORED_DRIVERS if it moved",
+                ))
+                continue
+            _lint_function(node, mark_lines, f"{name}:{cls}.{fn}", rep)
+    return rep
+
+
+def lint_no_callbacks(closed_jaxpr, target: str,
+                      report: AnalysisReport | None = None
+                      ) -> AnalysisReport:
+    """A scan-resident round graph must contain zero host callbacks."""
+    rep = report or AnalysisReport(target=target)
+    found = 0
+    for where, eqn, _ in iter_eqns(closed_jaxpr.jaxpr, target):
+        if eqn.primitive.name in CALLBACK_PRIMS:
+            found += 1
+            rep.add(Finding(
+                "host-sync", "error", where,
+                f"host callback '{eqn.primitive.name}' inside a scan "
+                "driver graph: a hidden per-round sync (and telemetry "
+                "channel) that breaks the one-sync-per-block contract",
+            ))
+    if not found:
+        rep.add(Finding(
+            "host-sync", "info", target,
+            "callback-free graph: the block's only host point is the "
+            "trace readback after dispatch",
+        ))
+    return rep
+
+
+# -- fixed-point headroom lint ---------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SummaryBounds:
+    """Configuration-level magnitude bounds on one institution's summary.
+
+    From these four deployment facts the lint derives worst-case bounds
+    on every summary statistic an institution ever encodes, then proves
+    the aggregation headroom invariants symbolically:
+
+    * hessian entry:  ``0.25 * n_max * x_max**2``  (logistic w <= 1/4)
+    * gradient entry: ``n_max * x_max``            (|y - p| <= 1)
+    * deviance:       ``2 * n_max * (log 2 + d * x_max * beta_max)``
+    * count:          ``n_max``
+    """
+
+    d: int
+    n_max: int
+    num_parts: int
+    x_max: float = 1.0
+    beta_max: float = 10.0
+
+    def eta_max(self) -> float:
+        return self.d * self.x_max * self.beta_max
+
+    def max_abs(self) -> float:
+        hess = 0.25 * self.n_max * self.x_max ** 2
+        grad = self.n_max * self.x_max
+        dev = 2.0 * self.n_max * (math.log(2.0) + self.eta_max())
+        return max(hess, grad, dev, float(self.n_max))
+
+
+def lint_headroom(bounds: SummaryBounds, aggregator=None,
+                  report: AnalysisReport | None = None) -> AnalysisReport:
+    """Prove the overflow invariants from config bounds, statically.
+
+    The static twin of the runtime pair ``check_aggregation_headroom``
+    (CRT residue sums fit uint64) and ``FixedPointCodec.check_headroom``
+    / ``SecureAggregator.headroom_ok`` (the decoded aggregate fits the
+    codec's signed capacity).
+    """
+    if aggregator is None:
+        from ..core.secure_agg import SecureAggregator
+
+        aggregator = SecureAggregator(backend="pallas")
+    rep = report or AnalysisReport(target="headroom")
+    field = aggregator.scheme.field
+    s = bounds.num_parts
+
+    worst = s * max(field.moduli)
+    if worst >= 2 ** 64:
+        rep.add(Finding(
+            "headroom", "error", "aggregation",
+            f"S * max(p_r) = {s} * {max(field.moduli)} = {worst} >= "
+            "2**64: the Algorithm-2 uint64 residue accumulator can wrap "
+            f"— at these moduli at most {2 ** 64 // max(field.moduli)} "
+            "institutions are admissible",
+        ))
+    else:
+        rep.add(Finding(
+            "headroom", "info", "aggregation",
+            f"S * max(p_r) = {worst} < 2**64 "
+            f"({math.log2(2 ** 64 / worst):.1f} bits of accumulator "
+            "headroom)",
+        ))
+
+    cap = aggregator.codec.capacity()
+    need = bounds.max_abs() * s
+    if not aggregator.headroom_ok(bounds.max_abs(), s):
+        rep.add(Finding(
+            "headroom", "error", "codec",
+            f"worst-case aggregate {need:.3g} >= codec capacity "
+            f"{cap:.3g} (frac_bits={aggregator.codec.frac_bits}): the "
+            "encoded aggregate would saturate — shrink n_max/num_parts "
+            "or the payload bounds",
+        ))
+    else:
+        rep.add(Finding(
+            "headroom", "info", "codec",
+            f"worst-case aggregate {need:.3g} < capacity {cap:.3g} "
+            f"({math.log2(cap / need):.1f} bits of codec headroom)",
+        ))
+    return rep
+
+
+# -- mesh-axis lint --------------------------------------------------------
+
+
+def _eqn_axis_names(eqn):
+    names = []
+    for key in ("axes", "axis_name", "axis"):
+        val = eqn.params.get(key)
+        if val is None:
+            continue
+        if not isinstance(val, (tuple, list)):
+            val = (val,)
+        names.extend(v for v in val if isinstance(v, str))
+    return names
+
+
+def lint_mesh_axes(closed_jaxpr, target: str,
+                   report: AnalysisReport | None = None) -> AnalysisReport:
+    """Every collective axis must be a protocol mesh axis, bound in-mesh."""
+    from ..distributed.sharding import POD_AXIS, SHARE_AXIS
+
+    allowed = {POD_AXIS, SHARE_AXIS}
+    rep = report or AnalysisReport(target=target)
+    seen = 0
+    for where, eqn, sizes in iter_eqns(closed_jaxpr.jaxpr, target):
+        for name in _eqn_axis_names(eqn):
+            seen += 1
+            if name not in allowed:
+                rep.add(Finding(
+                    "mesh-axes", "error", where,
+                    f"collective over unknown axis '{name}' — protocol "
+                    f"collectives run only over {sorted(allowed)}",
+                ))
+            elif sizes and name not in sizes:
+                rep.add(Finding(
+                    "mesh-axes", "error", where,
+                    f"axis '{name}' is not bound by the enclosing "
+                    f"shard_map mesh (mesh axes: {sorted(sizes)})",
+                ))
+            elif not sizes:
+                rep.add(Finding(
+                    "mesh-axes", "warning", where,
+                    f"collective over '{name}' outside any shard_map "
+                    "mesh in the traced graph: axis size unprovable",
+                ))
+    if seen:
+        rep.add(Finding(
+            "mesh-axes", "info", target,
+            f"{seen} collective axis reference(s) checked",
+        ))
+    return rep
+
+
+# -- Pallas kernel knob lint -----------------------------------------------
+
+
+def lint_kernel_knobs(report: AnalysisReport | None = None, *,
+                      knobs=None, d: int = 128, num_configs: int = 8,
+                      num_residues: int = 2, threshold: int = 2,
+                      num_points: int = 3) -> AnalysisReport:
+    """Check the compiled-path blocking knobs without compiling.
+
+    Reuses the ``kernels.tuning`` VMEM working-set model at the gate's
+    deployment-shaped dims (lane-aligned d, a CV-sweep config batch, the
+    default 3-center share layout).
+    """
+    from ..kernels.tuning import (VMEM_LIMIT_BYTES,
+                                  validate_real_kernel_knobs)
+
+    rep = report or AnalysisReport(target="kernel-knobs")
+    try:
+        results = validate_real_kernel_knobs(
+            knobs, d=d, num_configs=num_configs,
+            num_residues=num_residues, threshold=threshold,
+            num_points=num_points,
+        )
+    except ValueError as e:
+        rep.add(Finding(
+            "kernel-knobs", "error", "kernels.tuning",
+            f"compiled-path knob rejected: {e}",
+        ))
+        return rep
+    for r in results:
+        pct = 100.0 * r["vmem_bytes"] / VMEM_LIMIT_BYTES
+        rep.add(Finding(
+            "kernel-knobs", "info", r["kernel"],
+            f"working set {r['vmem_bytes']} B = {pct:.1f}% of the "
+            f"{VMEM_LIMIT_BYTES} B VMEM budget",
+        ))
+    return rep

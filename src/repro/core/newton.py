@@ -49,11 +49,12 @@ from .batched_summaries import (
 )
 from .flatbuf import LANES, ROW_ALIGN, _rows_for
 from .logreg import LocalSummaries, local_summaries, deviance
-from .secure_agg import SecureAggregator
+from .secure_agg import SecureAggregator, declassify_sum
 
 __all__ = ["FitResult", "RoundReport", "newton_step", "prox_newton_step",
            "centralized_fit", "secure_fit", "SecureFitDriver",
-           "regularized_objective", "stop_threshold", "should_stop"]
+           "regularized_objective", "stop_threshold", "should_stop",
+           "stop_threshold_host", "should_stop_host"]
 
 PROTECT_CHOICES = ("none", "gradient", "hessian", "both")
 
@@ -100,6 +101,27 @@ def should_stop(obj_prev, obj, tol: float, num_parts: int, scale: float):
     """True when |obj_prev - obj| clears the shared threshold."""
     return jnp.abs(obj_prev - obj) < stop_threshold(obj, tol, num_parts,
                                                     scale)
+
+
+def stop_threshold_host(obj: float, tol: float, num_parts: int,
+                        scale: float) -> float:
+    """Pure-host twin of ``stop_threshold`` (IEEE-identical for floats).
+
+    The per-round drivers test convergence on an objective that is
+    ALREADY a host float (the round's one sync); routing it back through
+    the jnp version cost a device round-trip per round for scalar
+    arithmetic.  Same expression, same f64 semantics — a test pins the
+    two bit-equal across a value grid including inf.
+    """
+    quant_floor = (num_parts + 1) * 0.5 / scale
+    return max(tol * (1.0 + abs(obj)), quant_floor)
+
+
+def should_stop_host(obj_prev: float, obj: float, tol: float,
+                     num_parts: int, scale: float) -> bool:
+    """Pure-host twin of ``should_stop`` for already-synced objectives."""
+    return abs(obj_prev - obj) < stop_threshold_host(obj, tol, num_parts,
+                                                     scale)
 
 
 @dataclasses.dataclass
@@ -341,12 +363,14 @@ def _fused_secure_iteration(beta, key, X, X32, y, counts, lam,
         tree["count"] = counts.astype(jnp.float64)
     if tree:
         revealed = agg.secure_round_batched(key, tree, points=points)
+    # unprotected leaves still only ever leave as cross-institution sums:
+    # the annotated declassification the static taint gate certifies
     global_h = revealed["hessian"] if protect in ("hessian", "both") \
-        else jnp.sum(hessian, axis=0)
+        else declassify_sum(hessian, axis=0)
     global_g = revealed["gradient"] if protect in ("gradient", "both") \
-        else jnp.sum(gradient, axis=0)
+        else declassify_sum(gradient, axis=0)
     global_dev = revealed["deviance"] if protect != "none" \
-        else jnp.sum(dev)
+        else declassify_sum(dev, axis=0)
     obj = regularized_objective(global_dev, beta, lam, l1)
     beta_new = prox_newton_step(
         beta, jnp.asarray(global_h, jnp.float64),
@@ -578,8 +602,8 @@ class SecureFitDriver:
         self.iteration += 1
         self.trace.append(obj)
         self.bytes_transmitted += nbytes
-        if bool(should_stop(self._obj_prev, obj, self.tol, len(parts),
-                            self.agg.codec.scale)):
+        if should_stop_host(self._obj_prev, obj, self.tol, len(parts),
+                            self.agg.codec.scale):
             self.converged = True
         else:
             self._obj_prev = obj
@@ -689,7 +713,7 @@ class SecureFitDriver:
             self.agg.scheme.interpret, points=pts,
             summaries_backend=self.summaries_backend,
         )
-        # the one host sync per iteration
+        # host-sync: the one objective readback per fused iteration
         return float(obj), lambda: beta_new
 
     # -- scan-resident blocks ------------------------------------------------
@@ -752,9 +776,11 @@ class SecureFitDriver:
             num_rounds=num_rounds, num_parts=len(parts),
             max_rounds=num_rounds,
         )
-        # ---- the block's one host sync: trace + carry readback
-        objs = np.asarray(objs)
-        actives = np.asarray(actives)
+        # host-sync: the block's ONE readback — trace + scalar carry in a
+        # single transfer (beta stays on device for the next block)
+        objs, actives, obj_prev_h, conv_h, base_h = jax.device_get(
+            (objs, actives, carry[1], carry[2], carry[4])
+        )
         new_reports: list[RoundReport] = []
         for r in range(num_rounds):
             if not actives[r]:
@@ -773,9 +799,9 @@ class SecureFitDriver:
             self.reports.append(report)
             new_reports.append(report)
         self.beta = carry[0]
-        self._obj_prev = float(carry[1])
-        self.converged = bool(carry[2])
-        self._round_base = int(carry[4])
+        self._obj_prev = float(obj_prev_h)
+        self.converged = bool(conv_h)
+        self._round_base = int(base_h)
         return new_reports
 
     def run(self, max_iter: int | None = None) -> FitResult:

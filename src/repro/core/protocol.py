@@ -61,7 +61,7 @@ from .newton import (
     _iteration_bytes,
     newton_step,
     regularized_objective,
-    should_stop,
+    should_stop_host,
 )
 from .secure_agg import SecureAggregator
 
@@ -482,7 +482,7 @@ class StudyCoordinator:
             self.agg.scheme.interpret, points=points, include_count=True,
             summaries_backend=self.summaries_backend,
         )
-        # the one host sync of the round (same role as secure_fit's)
+        # host-sync: the round's one objective readback (secure_fit's twin)
         return float(obj), lambda: beta_new
 
     # -- scan-resident blocks --------------------------------------------------
@@ -541,12 +541,11 @@ class StudyCoordinator:
             num_rounds=num_rounds, num_parts=len(cohort),
             max_rounds=num_rounds,
         )
-        # ---- the block's one host sync: trace + carry readback
-        objs = np.asarray(objs)
-        actives = np.asarray(actives)
-        beta_final = carry[0]
-        obj_prev_final = float(carry[1])
-        converged_final = bool(carry[2])
+        # host-sync: the block's ONE readback — trace + scalar carry in a
+        # single transfer (beta stays on device for the next block)
+        objs, actives, obj_prev_h, conv_h, base_h = jax.device_get(
+            (objs, actives, carry[1], carry[2], carry[4])
+        )
         new_reports: list[RoundReport] = []
         for r in range(num_rounds):
             if not actives[r]:
@@ -562,10 +561,10 @@ class StudyCoordinator:
                 nbytes,
             ))
             self.reports.append(new_reports[-1])
-        self.beta = beta_final
-        self._obj_prev = obj_prev_final
-        self.converged = converged_final
-        self._round_base = int(carry[4])
+        self.beta = carry[0]
+        self._obj_prev = float(obj_prev_h)
+        self.converged = bool(conv_h)
+        self._round_base = int(base_h)
         return new_reports
 
     def _finish_round(self, obj, make_beta_new, cohort, stragglers,
@@ -577,8 +576,8 @@ class StudyCoordinator:
         """
         self.iteration += 1
         self.trace.append(obj)
-        if bool(should_stop(self._obj_prev, obj, self.tol, len(cohort),
-                            self.agg.codec.scale)):
+        if should_stop_host(self._obj_prev, obj, self.tol, len(cohort),
+                            self.agg.codec.scale):
             self.converged = True
         else:
             self._obj_prev = obj

@@ -100,6 +100,7 @@ def fit_scan_block(beta, obj_prev, converged, iters, key, round_base,
         regularized_objective,
         should_stop,
     )
+    from .secure_agg import declassify_sum
 
     packed = PackedPartitions(X, X32, y, counts)
     scale = agg.codec.scale
@@ -116,12 +117,14 @@ def fit_scan_block(beta, obj_prev, converged, iters, key, round_base,
             tree["count"] = counts.astype(jnp.float64)
         revealed = agg.secure_round_batched(kr, tree, points=points) \
             if tree else {}
+        # unprotected leaves leave the round ONLY as cross-institution
+        # sums — the annotated declassification the static gate checks
         H = revealed["hessian"] if protect in ("hessian", "both") \
-            else jnp.sum(sm.hessian, axis=0)
+            else declassify_sum(sm.hessian, axis=0)
         g = revealed["gradient"] if protect in ("gradient", "both") \
-            else jnp.sum(sm.gradient, axis=0)
+            else declassify_sum(sm.gradient, axis=0)
         dev = revealed["deviance"] if protect != "none" \
-            else jnp.sum(sm.deviance)
+            else declassify_sum(sm.deviance, axis=0)
         obj = regularized_objective(dev, beta, lam, l1)
         active = ~converged & (iters < max_rounds)
         stop = should_stop(obj_prev, obj, tol, num_parts, scale)

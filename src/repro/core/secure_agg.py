@@ -95,6 +95,7 @@ __all__ = [
     "secure_add",
     "secure_scale_by_public",
     "check_aggregation_headroom",
+    "declassify_sum",
     "FlatProtected",
     "SecureAggregator",
     "ShardedAggregate",
@@ -123,6 +124,27 @@ def check_aggregation_headroom(num_addends: int, field: FieldSpec) -> None:
             f"{num_addends} * max modulus {max(field.moduli)} >= 2**64 "
             "would overflow the uint64 accumulator before the trailing mod"
         )
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def declassify_sum(x, axis: int = 0):
+    """The sanctioned PLAINTEXT aggregation over the institution axis.
+
+    Semantically just ``jnp.sum(x, axis=axis)`` — but spelled as a named
+    jitted boundary so the static privacy-flow verifier
+    (:mod:`repro.analysis`) can certify it.  The paper's pragmatic
+    protect modes ("gradient" / "hessian" / "none") deliberately exchange
+    SOME summaries in the clear; the protocol contract is that only
+    their *cross-institution sums* ever leave the round.  Every driver
+    spells those sums through this function, which the taint verifier
+    treats as the one annotated SECRET -> PUBLIC declassification for
+    unprotected leaves (it still checks the reduction actually
+    aggregates >= 2 addends, so a non-reducing "sum" cannot launder an
+    individual institution's summary).  A plain ``jnp.sum`` on secret
+    data fails the gate — which is the point: intentional plaintext
+    aggregation must be visible and auditable.
+    """
+    return jnp.sum(x, axis=axis)
 
 
 def secure_add(a, b, field: FieldSpec, residue_axis: int = 0):

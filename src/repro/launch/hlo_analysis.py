@@ -11,9 +11,14 @@ HLO text itself:
 * **bytes** — HBM-traffic estimate: operand + result buffer sizes of
   top-level ops (fusion boundaries), i.e. the same convention XLA's own
   "bytes accessed" uses, but loop-aware.
-* **collective bytes** — per collective kind, result-buffer sizes (shapes in
-  post-partitioning HLO are already per-device).  all-reduce counts 2x
-  (reduce-scatter + all-gather phases of a ring).
+* **collective bytes** — per collective kind (shapes in post-partitioning
+  HLO are already per-device).  all-reduce counts 2x its result bytes
+  (the reduce-scatter + all-gather phases of a ring); reduce-scatter
+  counts its OPERAND bytes (the ring moves the full input, the result is
+  the 1/D-sized shard); all-gather counts its result bytes (the full
+  gathered buffer).  The conventions are mutually consistent: a
+  reduce-scatter + all-gather pair over the same logical buffer sums to
+  exactly the all-reduce figure.
 
 While trip counts are recovered from the loop condition's ROOT compare
 constant; nested loops multiply.  All numbers are per-device.
@@ -420,12 +425,19 @@ def analyze_hlo(text: str) -> HloCost:
                 total.bytes_by_bucket[f"dot {op.type_str[:48]}"] += b
                 continue
             if op.kind in COLLECTIVES:
-                nbytes = _shape_bytes(op.type_str)
-                factor = 2.0 if op.kind == "all-reduce" else 1.0
+                result_b = _shape_bytes(op.type_str)
+                if op.kind == "reduce-scatter":
+                    # the ring moves the full OPERAND; the result is the
+                    # 1/D shard (so RS + AG == all-reduce's 2x result)
+                    nbytes = _operand_bytes(op, shapes) or result_b
+                    factor = 1.0
+                else:
+                    nbytes = result_b
+                    factor = 2.0 if op.kind == "all-reduce" else 1.0
                 total.collective_bytes[op.kind] += factor * nbytes
                 total.collective_count[op.kind] += 1
-                total.bytes += nbytes
-                total.bytes_by_kind[op.kind] += nbytes
+                total.bytes += result_b
+                total.bytes_by_kind[op.kind] += result_b
                 total.bytes_by_bucket[
                     f"{op.kind} {op.type_str[:48]}"
                 ] += factor * nbytes

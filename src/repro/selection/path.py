@@ -61,7 +61,7 @@ from ..core.newton import (
     should_stop,
 )
 from ..core.scanfit import scan_rounds
-from ..core.secure_agg import SecureAggregator
+from ..core.secure_agg import SecureAggregator, declassify_sum
 from .folds import assign_folds, pack_fold_ids
 from .report import PathReport, one_se_rule
 
@@ -130,17 +130,21 @@ def _cv_sweep_block(betas, obj_prev, converged, iters, vdev, vcorr, vcnt,
             revealed = agg.secure_round_multiconfig(kr, tree, points=points)
         else:
             revealed = {}
+        # unprotected leaves leave the round ONLY as cross-institution
+        # sums (axis 1 of the (C, S, ...) summaries) — the annotated
+        # declassification the static gate checks
         H = revealed["hessian"] if protect in ("hessian", "both") \
-            else jnp.sum(sm.hessian, axis=1)
+            else declassify_sum(sm.hessian, axis=1)
         g = revealed["gradient"] if protect in ("gradient", "both") \
-            else jnp.sum(sm.gradient, axis=1)
+            else declassify_sum(sm.gradient, axis=1)
         dev = revealed["deviance"] if protect != "none" \
-            else jnp.sum(sm.deviance, axis=1)
+            else declassify_sum(sm.deviance, axis=1)
         vdev_r = revealed.get("val_deviance",
-                              jnp.sum(sm.val_deviance, axis=1))
+                              declassify_sum(sm.val_deviance, axis=1))
         vcorr_r = revealed.get("val_correct",
-                               jnp.sum(sm.val_correct, axis=1))
-        vcnt_r = revealed.get("val_count", jnp.sum(sm.val_count, axis=1))
+                               declassify_sum(sm.val_correct, axis=1))
+        vcnt_r = revealed.get("val_count",
+                              declassify_sum(sm.val_count, axis=1))
         obj = regularized_objective(dev, betas, lams, l1)  # (C,)
         active = ~converged & (iters < max_rounds)
         # the one stopping rule, vectorized over the config axis
@@ -374,19 +378,20 @@ class PathDriver:
                 num_parts=packed.num_institutions,
                 max_rounds=s.max_rounds,
             )
-            # the block readback: one host transfer per rounds_per_sync
-            objs = np.asarray(objs)
-            actives = np.asarray(actives)
+            # host-sync: the block's ONE readback — trace + carry in a
+            # single transfer (the carry itself stays on device for the
+            # next block dispatch)
+            (objs, actives, betas_f, conv_f, iters_f, vdev_f, vcorr_f,
+             vcnt_f, base_f) = jax.device_get(
+                (objs, actives, carry[0], carry[2], carry[3], carry[4],
+                 carry[5], carry[6], carry[7])
+            )
             chunk_trace.append(objs)
             executed += int(actives.any(axis=1).sum())
-            done = bool(np.asarray(carry[2]).all())
-            if done or int(np.asarray(carry[3]).max()) >= s.max_rounds:
+            if bool(conv_f.all()) or int(iters_f.max()) >= s.max_rounds:
                 break
-        betas_f = np.asarray(carry[0])
-        iters_f = np.asarray(carry[3])
-        conv_f = np.asarray(carry[2])
 
-        state["round_base"] = np.asarray(int(np.asarray(carry[7])))
+        state["round_base"] = np.asarray(int(base_f))
         state["rounds_total"] = np.asarray(
             int(state["rounds_total"]) + executed
         )
@@ -410,12 +415,9 @@ class PathDriver:
                 state["fold_betas"][li] = by_lam[row]
                 state["fold_rounds"][li] = iters_f.reshape(-1, K)[row]
                 state["fold_converged"][li] = conv_f.reshape(-1, K)[row]
-                state["val_deviance"][li] = np.asarray(
-                    carry[4]).reshape(-1, K)[row]
-                state["val_correct"][li] = np.asarray(
-                    carry[5]).reshape(-1, K)[row]
-                state["val_count"][li] = np.asarray(
-                    carry[6]).reshape(-1, K)[row]
+                state["val_deviance"][li] = vdev_f.reshape(-1, K)[row]
+                state["val_correct"][li] = vcorr_f.reshape(-1, K)[row]
+                state["val_count"][li] = vcnt_f.reshape(-1, K)[row]
             # warm-start source for the next chunk: the LAST (smallest)
             # λ of this chunk, the path neighbour of the next chunk
             state["warm"] = by_lam[-1].copy()

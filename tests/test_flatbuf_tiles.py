@@ -1,0 +1,143 @@
+"""Tile-slicing coverage for the flat-buffer codec at awkward shapes.
+
+``tile_slices`` / ``unpack_pytree_tile`` carry the sharded
+``secure_psum`` wire (``reveal="sharded"``: the rows axis reduce-scatters
+into per-device tiles), so their static fragment table is pinned here at
+the shapes that historically go wrong: a dimension not divisible by the
+device count, single-element leaves straddling nothing, tiles that are
+pure zero-pad tail, and reassembly equivalence with ``unpack_pytree``.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flatbuf import (LANES, ROW_ALIGN, pack_pytree, tile_slices,
+                                unpack_pytree, unpack_pytree_tile)
+
+
+def _tree(d: int):
+    return {
+        "gradient": jnp.arange(d, dtype=jnp.float64) - d / 2,
+        "hessian": jnp.arange(d * d, dtype=jnp.float64).reshape(d, d) * 0.5,
+        "deviance": jnp.asarray(3.25, jnp.float64).reshape(()),
+    }
+
+
+def _reassemble(buf, layout, num_tiles):
+    """Stitch every tile's fragments back into full raveled leaves."""
+    rows = layout.rows // num_tiles
+    parts = {i: {} for i in range(len(layout.shapes))}
+    for t in range(num_tiles):
+        tile = buf[t * rows:(t + 1) * rows]
+        for leaf, (start, stop, frag) in unpack_pytree_tile(
+            tile, layout, t, num_tiles
+        ).items():
+            parts[leaf][start] = (stop, frag)
+    leaves = []
+    for i, shape in enumerate(layout.shapes):
+        n = int(np.prod(shape, dtype=np.int64))
+        flat = np.zeros(n)
+        covered = 0
+        for start in sorted(parts[i]):
+            stop, frag = parts[i][start]
+            flat[start:stop] = np.asarray(frag)
+            covered += stop - start
+        assert covered == n, f"leaf {i} fragments do not tile the leaf"
+        leaves.append(flat.reshape(shape))
+    return leaves
+
+
+def test_rows_not_divisible_raises():
+    # d=4: gradient 4 + hessian 16 + scalar = 21 elements -> 8 rows
+    _, layout = pack_pytree(_tree(4))
+    assert layout.rows == ROW_ALIGN
+    with pytest.raises(ValueError, match="does not split"):
+        tile_slices(layout, 3)
+
+
+def test_lcm_row_align_makes_awkward_counts_divisible():
+    """d=5 over 3 devices: 31 elements never aligns at row_align=8, but
+    the lcm(8, 3) alignment the sharded wire uses always does."""
+    num_tiles = 3
+    buf, layout = pack_pytree(_tree(5),
+                              row_align=math.lcm(ROW_ALIGN, num_tiles))
+    assert layout.rows % num_tiles == 0
+    leaves = _reassemble(buf, layout, num_tiles)
+    np.testing.assert_array_equal(leaves[1], np.arange(5) - 2.5)
+
+
+def test_fragment_table_is_static_and_covers_leaves():
+    num_tiles = 4
+    buf, layout = pack_pytree(_tree(7),
+                              row_align=math.lcm(ROW_ALIGN, num_tiles))
+    table = tile_slices(layout, num_tiles)
+    assert len(table) == num_tiles
+    # fragments are plain ints (compile-time constants for jitted code)
+    for frags in table:
+        for f in frags:
+            assert all(isinstance(v, int)
+                       for v in (f.leaf, f.leaf_start, f.leaf_stop,
+                                 f.tile_offset))
+    # per-leaf coverage: fragment extents partition [0, n) exactly
+    for i, shape in enumerate(layout.shapes):
+        n = int(np.prod(shape, dtype=np.int64))
+        spans = sorted(
+            (f.leaf_start, f.leaf_stop)
+            for frags in table for f in frags if f.leaf == i
+        )
+        assert spans[0][0] == 0 and spans[-1][1] == n
+        assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+
+
+def test_single_row_leaves_and_empty_tail_tiles():
+    """Tiny leaves land whole in tile 0; trailing tiles that are pure
+    zero-pad carry NO fragments (the pad belongs to nobody)."""
+    tree = {"a": jnp.asarray([1.0, 2.0]), "b": jnp.asarray(7.0).reshape(())}
+    num_tiles = 8
+    buf, layout = pack_pytree(tree, row_align=num_tiles)
+    table = tile_slices(layout, num_tiles)
+    first = unpack_pytree_tile(buf[:layout.rows // num_tiles], layout, 0,
+                               num_tiles)
+    assert set(first) == {0, 1}
+    np.testing.assert_array_equal(np.asarray(first[0][2]), [1.0, 2.0])
+    assert first[1] == (0, 1, first[1][2])
+    assert float(first[1][2][0]) == 7.0
+    # 3 elements in a (8, 128) buffer: every tile past the first is pad
+    for t in range(1, num_tiles):
+        assert table[t] == ()
+        assert unpack_pytree_tile(
+            buf[t * (layout.rows // num_tiles):
+                (t + 1) * (layout.rows // num_tiles)],
+            layout, t, num_tiles,
+        ) == {}
+
+
+def test_tile_reassembly_matches_unpack_pytree():
+    num_tiles = 6
+    tree = _tree(9)
+    buf, layout = pack_pytree(tree,
+                              row_align=math.lcm(ROW_ALIGN, num_tiles))
+    whole = unpack_pytree(buf, layout)
+    leaves = _reassemble(buf, layout, num_tiles)
+    np.testing.assert_array_equal(leaves[1], np.asarray(whole["gradient"]))
+    np.testing.assert_array_equal(leaves[2], np.asarray(whole["hessian"]))
+    np.testing.assert_array_equal(
+        leaves[0].reshape(()), np.asarray(whole["deviance"])
+    )
+
+
+def test_leaf_straddles_tile_boundary():
+    """A leaf bigger than one tile splits into per-tile fragments whose
+    tile_offsets are where the fragment starts inside each tile."""
+    num_tiles = 2
+    d = 40  # hessian d*d = 1600 elements > one (8, 128) = 1024-elem tile
+    buf, layout = pack_pytree(_tree(d), row_align=ROW_ALIGN * num_tiles)
+    table = tile_slices(layout, num_tiles)
+    hess_frags = [f for frags in table for f in frags if f.leaf == 2]
+    assert len(hess_frags) == 2
+    leaves = _reassemble(buf, layout, num_tiles)
+    np.testing.assert_array_equal(
+        leaves[2], np.arange(d * d).reshape(d, d) * 0.5
+    )

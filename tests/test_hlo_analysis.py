@@ -89,6 +89,51 @@ def test_collective_conventions():
         assert h.collective_bytes["all-reduce"] == 2 * 1024 * 4  # 2x rule
 
 
+_RS_AG_HLO = """
+HloModule rs_ag
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %rs = f32[256]{0} reduce-scatter(%p0), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+  ROOT %ag = f32[1024]{0} all-gather(%rs), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+_AR_HLO = """
+HloModule ar
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+
+
+def test_reduce_scatter_counts_operand_bytes():
+    """RS moves the full operand (4096 B), not its 1/D-sized result."""
+    h = analyze_hlo(_RS_AG_HLO)
+    assert h.collective_count["reduce-scatter"] == 1
+    assert h.collective_bytes["reduce-scatter"] == 1024 * 4
+
+
+def test_all_gather_counts_result_bytes():
+    """AG's traffic is the full gathered buffer it produces."""
+    h = analyze_hlo(_RS_AG_HLO)
+    assert h.collective_count["all-gather"] == 1
+    assert h.collective_bytes["all-gather"] == 1024 * 4
+
+
+def test_rs_ag_pair_matches_all_reduce():
+    """The conventions must be self-consistent: decomposing an AR into
+    its RS + AG phases may not change the collective-bytes total."""
+    pair = analyze_hlo(_RS_AG_HLO)
+    ar = analyze_hlo(_AR_HLO)
+    assert ar.collective_bytes["all-reduce"] == 2 * 1024 * 4
+    assert (pair.collective_bytes["reduce-scatter"]
+            + pair.collective_bytes["all-gather"]
+            ) == ar.collective_bytes["all-reduce"]
+
+
 def test_nested_scan_trip_products():
     def f(a):
         def outer(c, _):

@@ -360,10 +360,13 @@ def test_stop_threshold_semantics():
 def test_all_drivers_share_one_stopping_rule(study, monkeypatch):
     """Structural pin of the satellite fix: secure_fit (loop AND fused)
     and StudyCoordinator (loop AND fused rounds) all route their
-    convergence decision through newton.should_stop and form objectives
-    through newton.regularized_objective — no driver re-derives its own
-    threshold arithmetic, so they cannot drift apart at the tolerance
-    boundary again."""
+    convergence decision through newton's shared stopping rule —
+    ``should_stop`` in traced graphs, its bit-pinned host twin
+    ``should_stop_host`` on already-synced objectives (tests/
+    test_analysis.py pins the pair IEEE-identical) — and form
+    objectives through newton.regularized_objective; no driver
+    re-derives its own threshold arithmetic, so they cannot drift
+    apart at the tolerance boundary again."""
     import repro.core.newton as newton_mod
     import repro.core.protocol as protocol_mod
     from repro.core import StudyCoordinator
@@ -372,13 +375,19 @@ def test_all_drivers_share_one_stopping_rule(study, monkeypatch):
     agg = SecureAggregator(backend="pallas")
     seen = []
     orig = newton_mod.should_stop
+    orig_host = newton_mod.should_stop_host
 
     def spy(*a, **k):
         seen.append(True)
         return orig(*a, **k)
 
+    def spy_host(*a, **k):
+        seen.append(True)
+        return orig_host(*a, **k)
+
     monkeypatch.setattr(newton_mod, "should_stop", spy)
-    monkeypatch.setattr(protocol_mod, "should_stop", spy)
+    monkeypatch.setattr(newton_mod, "should_stop_host", spy_host)
+    monkeypatch.setattr(protocol_mod, "should_stop_host", spy_host)
 
     def count(run):
         del seen[:]
