@@ -38,7 +38,12 @@ from repro.core.protocol import Institution, StudyCoordinator
 from repro.core.secure_agg import SecureAggregator
 from repro.core.shamir import ShamirScheme
 from repro.data.synthetic import generate_synthetic
+from repro.obs import trace
 from repro.runtime import FailureInjector, FaultPolicy, RoundSupervisor
+
+# record round/newton/retry/protect spans for the end-of-run summary
+# table; disabled tracing is the default and costs one branch per span
+trace.enable()
 
 study = generate_synthetic(
     jax.random.PRNGKey(3), num_institutions=9,
@@ -94,6 +99,7 @@ for _ in range(30):
     if rec.suspected_dead:
         flags.append(f"suspected_dead={rec.suspected_dead}")
     print(f"round {rec.round_no:2d}: obj={rep.objective:.6f} "
+          f"|g|={rep.grad_norm:.2e} "
           f"responders={len(rep.responders)} stragglers={rep.stragglers} "
           f"centers={rep.centers_used} "
           f"degraded={'Y' if rec.degraded else 'n'}"
@@ -115,5 +121,11 @@ print(f"centers now at points "
       f"{sorted(c.index for c in coord.centers if c.online)} "
       f"(spare point 4 in service)")
 print(f"R^2 vs centralized-fit-on-responding-cohort = {r2:.8f}")
+
+tracer = trace.disable()
+print("\nper-round span summary (repro.obs.trace):")
+for line in tracer.summary_lines():
+    print("  " + line)
+
 assert coord.converged and r2 > 0.999
 print("OK")

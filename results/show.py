@@ -1,11 +1,108 @@
-import json, sys
-for f in sys.argv[1:]:
-    r = json.load(open(f))
+"""Render result artifacts: roofline JSON, BENCH_*.json rows, span JSONL.
+
+Usage: ``python results/show.py FILE [FILE ...]``
+
+Dispatches on content:
+
+* **roofline reports** (dicts with an ``hlo_analysis`` key) — the
+  original per-device bytes/flops/collective summary with top byte
+  buckets;
+* **benchmark rows** (``BENCH_*.json``: a list of row dicts) — one
+  aligned line per row, numeric trajectory columns auto-detected;
+* **span run ledgers** (``*.jsonl`` written by
+  ``repro.obs.trace.SpanTracer.export_jsonl``) — the per-kind wall-time
+  summary table plus the slowest individual spans.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+)
+
+
+def show_roofline(r: dict):
     h = r["hlo_analysis"]
     coll = sum(h["collective_bytes_per_device"].values())
-    print(f'{r["arch"]} {r["shape"]} [{r.get("variant")}] bytes %.3e mem %.1fs flops %.3e (%.2fs) coll %.3e (%.2fs) temp %.1fGB' % (
-        h["bytes_per_device"], h["bytes_per_device"]/819e9,
-        h["flops_per_device"], h["flops_per_device"]/197e12,
-        coll, coll/50e9, r["memory"]["temp_bytes_per_device"]/2**30))
+    print(
+        f'{r["arch"]} {r["shape"]} [{r.get("variant")}] '
+        "bytes %.3e mem %.1fs flops %.3e (%.2fs) coll %.3e (%.2fs) "
+        "temp %.1fGB" % (
+            h["bytes_per_device"], h["bytes_per_device"] / 819e9,
+            h["flops_per_device"], h["flops_per_device"] / 197e12,
+            coll, coll / 50e9,
+            r["memory"]["temp_bytes_per_device"] / 2**30,
+        )
+    )
     for b in h.get("top_byte_buckets", [])[:5]:
         print("   %.3e  %s" % (b["bytes"], b["bucket"]))
+
+
+def _fmt(v):
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def show_bench_rows(rows: list):
+    """BENCH_*.json trajectory: aligned per-row lines, label first."""
+    label_keys = ("label", "config", "mode", "kind", "name")
+    for row in rows:
+        if not isinstance(row, dict):
+            print(_fmt(row))
+            continue
+        label = next((str(row[k]) for k in label_keys if k in row), "")
+        rest = " ".join(
+            f"{k}={_fmt(v)}" for k, v in row.items()
+            if k not in label_keys and not isinstance(v, (list, dict))
+        )
+        print(f"  {label:<32} {rest}")
+
+
+def show_span_ledger(path: str):
+    """Span JSONL run ledger -> per-kind summary + slowest spans."""
+    from repro.obs.trace import SpanTracer
+
+    tracer = SpanTracer(capacity=1 << 20)
+    spans = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                d = json.loads(line)
+                tracer.record(d)
+                spans.append(d)
+    for line in tracer.summary_lines():
+        print(line)
+    slowest = sorted(spans, key=lambda d: -d["dur"])[:5]
+    if slowest:
+        print("slowest spans:")
+        for d in slowest:
+            attrs = " ".join(f"{k}={_fmt(v)}"
+                             for k, v in d.get("attrs", {}).items())
+            print(f"  {d['dur'] * 1e3:>9.3f} ms  {d['kind']}:{d['name']}"
+                  + (f"  [{attrs}]" if attrs else ""))
+
+
+def show(path: str):
+    print(f"== {path}")
+    if path.endswith(".jsonl"):
+        show_span_ledger(path)
+        return
+    with open(path) as fh:
+        data = json.load(fh)
+    if isinstance(data, dict) and "hlo_analysis" in data:
+        show_roofline(data)
+    elif isinstance(data, list):
+        show_bench_rows(data)
+    else:
+        print(json.dumps(data, indent=2))
+
+
+if __name__ == "__main__":
+    for f in sys.argv[1:]:
+        show(f)

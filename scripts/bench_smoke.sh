@@ -16,12 +16,19 @@
 # fault-free oracle), and the multihost-rounds smoke (scan residency =
 # one host sync per fit at loop-oracle beta parity; CPU-mesh round
 # latency flat in S; 2D distributed reveal bitwise vs the 1D wire;
-# real-kernel knob validation).  Run this before merging anything that
-# touches src/repro/core, src/repro/kernels or src/repro/runtime.
+# real-kernel knob validation).  Between the static gate and the perf
+# smokes it runs the RUNTIME privacy audit (`python -m repro.obs
+# audit`: executed declassification counts reconciled against every
+# gate-certified graph, extra-reveal self-test flagged) and the
+# obs-overhead smoke (span tracing <= gate%/round per driver shape,
+# traced beta bit-identical to untraced).  Run this before merging
+# anything that touches src/repro/core, src/repro/kernels or
+# src/repro/runtime.
 #
 # BENCH_FULL=1 additionally refreshes BENCH_e2e_secure_fit.json at the
-# full acceptance config (S=8, d=128, N=2e5; several minutes) and
-# BENCH_fault_overhead.json (supervision <= 2%/round gate).
+# full acceptance config (S=8, d=128, N=2e5; several minutes),
+# BENCH_fault_overhead.json (supervision <= 2%/round gate) and
+# BENCH_obs_overhead.json (tracing <= 2%/round gate).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -31,6 +38,12 @@ python -m pytest -x -q
 
 echo "== static privacy gate (taint verifier + protocol lints) =="
 scripts/static_checks.sh
+
+echo "== runtime privacy audit (ledger vs certified declassifications) =="
+# every driver spec's executed declassification counts must reconcile
+# with its gate-certified graph, and the deliberate extra-reveal
+# self-test must be FLAGGED (exit 1 otherwise)
+python -m repro.obs audit | tail -3
 
 echo "== secure_overhead smoke (both backends) =="
 python benchmarks/secure_overhead.py \
@@ -193,6 +206,32 @@ if failures:
 print("fault-overhead smoke OK")
 EOF
 
+echo "== obs-overhead smoke (traced vs untraced drivers, bit parity) =="
+python benchmarks/obs_overhead.py --quick >/dev/null
+
+python - <<'EOF'
+import json, sys
+
+rows = json.load(open("BENCH_obs_overhead_smoke.json"))
+failures = []
+seen = set()
+for r in rows:
+    if "driver" not in r:
+        continue
+    seen.add(r["driver"])
+    print(f"obs tracing [{r['driver']}]: {r['overhead_pct']:+.2f}%/round "
+          f"(gate {r['gate_pct']:.0f}%, "
+          f"bit-identical={r['beta_bit_identical']})")
+    if not r["pass"]:
+        failures.append(f"obs overhead gate failed: {r}")
+if seen != {"loop", "fused", "scan"}:
+    failures.append(f"driver rows missing from obs smoke: {seen}")
+if failures:
+    print("\n".join("FAIL: " + f for f in failures))
+    sys.exit(1)
+print("obs-overhead smoke OK")
+EOF
+
 echo "== multihost rounds smoke (scan residency + CPU-mesh latency) =="
 python benchmarks/multihost_rounds.py --quick --real-kernels >/dev/null
 
@@ -320,6 +359,24 @@ if bad:
 print(f"full fault-overhead gate OK "
       f"(supervision {sup[0]['overhead_pct']:+.2f}%/round, "
       f"{len(sched)} recovery schedules at oracle parity)")
+EOF
+    echo "== obs-overhead FULL (refreshes BENCH_obs_overhead.json) =="
+    python benchmarks/obs_overhead.py >/dev/null
+    python - <<'EOF'
+import json, sys
+rows = json.load(open("BENCH_obs_overhead.json"))
+gated = [r for r in rows if "driver" in r]
+bad = [r for r in gated if not r["pass"]]
+if len(gated) < 3:
+    print("FAIL: driver rows missing from BENCH_obs_overhead.json")
+    sys.exit(1)
+if bad:
+    # the acceptance gate: tracing <= 2%/round at the full config per
+    # driver shape, traced beta BIT-identical to untraced
+    print(f"FAIL: full obs-overhead gate: {bad}")
+    sys.exit(1)
+worst = max(r["overhead_pct"] for r in gated)
+print(f"full obs-overhead gate OK (worst {worst:+.2f}%/round)")
 EOF
     echo "== multihost rounds FULL (refreshes BENCH_multihost_rounds.json) =="
     python benchmarks/multihost_rounds.py --real-kernels >/dev/null

@@ -1,9 +1,15 @@
 #!/usr/bin/env bash
 # Standing static privacy gate: taint-verify every secure driver graph,
 # run the protocol lints (one-host-sync-per-block, fixed-point headroom,
-# mesh axes, Pallas VMEM knobs), then confirm the deliberately-leaky
-# fixtures are CAUGHT.  Pure tracing + AST + arithmetic — no kernel
-# executes, so the whole gate runs in seconds.
+# mesh axes, Pallas VMEM knobs, obs purity — the tracer/ledger/metrics
+# modules stay stdlib-only with zero callbacks or device
+# materializers), then confirm the deliberately-leaky fixtures are
+# CAUGHT.  Pure tracing + AST + arithmetic — no kernel executes, so the
+# whole gate runs in seconds.
+#
+# The RUNTIME half of the privacy story — reconciling executed
+# declassifications against these certified graphs — is
+# `python -m repro.obs audit` (bench_smoke runs it in quick mode).
 #
 #   scripts/static_checks.sh [--verbose] [--json] [--drivers SUBSTR]
 #

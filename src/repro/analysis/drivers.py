@@ -48,6 +48,14 @@ class DriverSpec:
     # mesh axis sizes known OUTSIDE any shard_map in the traced graph
     # (shard_map eqns push their own mesh's sizes during the walk)
     axis_sizes: dict = dataclasses.field(default_factory=dict)
+    # runnable form for the RUNTIME audit (``python -m repro.obs audit``):
+    # () -> None, executes the same driver graph on the same toy shapes
+    # so the privacy ledger's recorded counts can be reconciled against
+    # the static census of the built jaxpr.  None: spec is trace-only.
+    runner: Callable | None = None
+    # real devices the runner needs (psum specs trace on an AbstractMesh
+    # but execute on a concrete one)
+    min_devices: int = 1
 
 
 def toy_parts(num_parts: int = 3, n: int = 8, d: int = 4):
@@ -95,7 +103,20 @@ def _fused_spec(name: str, protect: str, include_count: bool):
         taints = [PUBLIC, PUBLIC, SECRET, SECRET, SECRET, SECRET]
         return closed, taints
 
-    return DriverSpec(name=name, build=build,
+    def runner():
+        from ..core.newton import _fused_secure_iteration
+
+        agg = _aggregator()
+        packed = _packed()
+        beta = jnp.zeros((packed.dim,), jnp.float64)
+        out = _fused_secure_iteration(
+            beta, jax.random.PRNGKey(0), packed.X, packed.X32, packed.y,
+            packed.counts, 1.0, agg, protect, 0.0, True, points=None,
+            include_count=include_count, summaries_backend="pallas",
+        )
+        jax.block_until_ready(out)
+
+    return DriverSpec(name=name, build=build, runner=runner,
                       threshold=_aggregator().scheme.threshold)
 
 
@@ -128,7 +149,25 @@ def _scan_spec(name: str, protect: str, include_count: bool):
         taints = [PUBLIC] * 6 + [SECRET] * 4
         return closed, taints
 
-    return DriverSpec(name=name, build=build,
+    def runner():
+        from ..core.scanfit import fit_scan_block
+
+        agg = _aggregator()
+        packed = _packed()
+        beta = jnp.zeros((packed.dim,), jnp.float64)
+        out = fit_scan_block(
+            beta, jnp.asarray(np.inf), jnp.asarray(False),
+            jnp.zeros((), jnp.int32), jax.random.PRNGKey(0),
+            jnp.zeros((), jnp.int32),
+            packed.X, packed.X32, packed.y, packed.counts, 1.0,
+            agg=agg, protect=protect, l1=0.0, tol=1e-10,
+            interpret=True, points=None, include_count=include_count,
+            summaries_backend="pallas", num_rounds=3,
+            num_parts=packed.num_institutions, max_rounds=3,
+        )
+        jax.block_until_ready(out)
+
+    return DriverSpec(name=name, build=build, runner=runner,
                       threshold=_aggregator().scheme.threshold)
 
 
@@ -180,7 +219,42 @@ def _selection_spec(name: str, protect: str):
         taints = [PUBLIC] * 9 + [SECRET] * 5 + [PUBLIC, PUBLIC]
         return closed, taints
 
-    return DriverSpec(name=name, build=build,
+    def runner():
+        from ..selection.folds import assign_folds, pack_fold_ids
+        from ..selection.path import _cv_sweep_block
+
+        agg = _aggregator()
+        num_parts, n, d, num_folds = 3, 8, 4, 2
+        packed = _packed(num_parts, n, d)
+        fold_parts = [
+            assign_folds(n, num_folds, j, 0) for j in range(num_parts)
+        ]
+        fold_ids = pack_fold_ids(fold_parts, packed.X.shape[1])
+        lam_grid = (1.0, 0.5)
+        cfg = len(lam_grid) * num_folds
+        lams = jnp.asarray(np.repeat(lam_grid, num_folds), jnp.float64)
+        fold_of = jnp.asarray(
+            np.tile(np.arange(num_folds, dtype=np.int32), len(lam_grid))
+        )
+        out = _cv_sweep_block(
+            jnp.zeros((cfg, d), jnp.float64),
+            jnp.full((cfg,), np.inf, jnp.float64),
+            jnp.zeros((cfg,), bool),
+            jnp.zeros((cfg,), jnp.int32),
+            jnp.zeros((cfg,), jnp.float64),
+            jnp.zeros((cfg,), jnp.float64),
+            jnp.zeros((cfg,), jnp.float64),
+            jax.random.PRNGKey(0), jnp.zeros((), jnp.int32),
+            packed.X, packed.X32, packed.y, packed.counts,
+            fold_ids, fold_of, lams,
+            agg=agg, protect=protect, l1=0.0, tol=1e-10,
+            interpret=True, points=None,
+            summaries_backend="pallas", num_rounds=2,
+            num_parts=packed.num_institutions, max_rounds=2,
+        )
+        jax.block_until_ready(out)
+
+    return DriverSpec(name=name, build=build, runner=runner,
                       threshold=_aggregator().scheme.threshold)
 
 
@@ -215,7 +289,28 @@ def _psum_spec(name: str, reveal: str, out: str, num_pods: int = 4):
         taints = [SECRET] * len(jax.tree_util.tree_leaves(tree))
         return closed, taints
 
-    return DriverSpec(name=name, build=build,
+    def runner():
+        from jax.sharding import PartitionSpec as P
+
+        from ..core.secure_agg import secure_psum
+        from ..distributed.compat import shard_map
+        from ..distributed.multihost import pod_mesh
+        from ..distributed.sharding import POD_AXIS
+
+        agg = _aggregator()
+        key = jax.random.PRNGKey(0)
+        mesh = pod_mesh(num_pods)
+        fn = jax.jit(shard_map(
+            lambda tree: secure_psum(
+                tree, POD_AXIS, key, aggregator=agg, reveal=reveal,
+                out=out,
+            ),
+            mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False,
+        ))
+        jax.block_until_ready(fn(_toy_tree()))
+
+    return DriverSpec(name=name, build=build, runner=runner,
+                      min_devices=num_pods,
                       threshold=_aggregator().scheme.threshold)
 
 
@@ -242,7 +337,23 @@ def _psum_2d_spec(name: str, num_pods: int = 3):
         taints = [SECRET] * len(jax.tree_util.tree_leaves(tree))
         return closed, taints
 
-    return DriverSpec(name=name, build=build,
+    def runner():
+        from jax.sharding import PartitionSpec as P
+
+        from ..distributed.compat import shard_map
+        from ..distributed.multihost import pod_share_mesh, secure_psum_2d
+
+        agg = _aggregator()
+        key = jax.random.PRNGKey(0)
+        mesh = pod_share_mesh(num_pods, agg.scheme.threshold)
+        fn = jax.jit(shard_map(
+            lambda tree: secure_psum_2d(tree, key, aggregator=agg),
+            mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False,
+        ))
+        jax.block_until_ready(fn(_toy_tree()))
+
+    return DriverSpec(name=name, build=build, runner=runner,
+                      min_devices=num_pods * _aggregator().scheme.threshold,
                       threshold=_aggregator().scheme.threshold)
 
 

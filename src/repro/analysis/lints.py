@@ -28,6 +28,13 @@ records (see ``report.py``):
 * :func:`lint_kernel_knobs` — the compiled-path Pallas blocking knobs
   checked against the ``kernels.tuning`` VMEM working-set model at the
   gate's dims, without compiling anything.
+* :func:`lint_obs_purity` — AST pass over the observability core
+  modules (``obs/trace.py``, ``obs/ledger.py``, ``obs/metrics.py``):
+  stdlib-only imports (so the jax-free runtime layer can use them, and
+  so instrumentation can never introduce a device dependency), zero
+  host callbacks, zero device materializers.  The one sanctioned
+  exception is the lazy ``import jax.profiler`` inside
+  ``SpanTracer._annotation`` — the optional profile-annotation hook.
 """
 from __future__ import annotations
 
@@ -48,6 +55,7 @@ __all__ = [
     "lint_headroom",
     "lint_mesh_axes",
     "lint_kernel_knobs",
+    "lint_obs_purity",
 ]
 
 
@@ -418,6 +426,102 @@ def lint_mesh_axes(closed_jaxpr, target: str,
             "mesh-axes", "info", target,
             f"{seen} collective axis reference(s) checked",
         ))
+    return rep
+
+
+# -- obs purity lint -------------------------------------------------------
+
+# the observability core: host-side bookkeeping the drivers import at
+# load time — must work in jax-free processes and may never observe a
+# device value (PUBLIC host floats only ride the existing readbacks)
+OBS_CORE_MODULES = ("obs/trace.py", "obs/ledger.py", "obs/metrics.py")
+
+# (module, enclosing function, imported module): the one sanctioned
+# non-stdlib import — the lazy, failure-tolerant profiler hook
+_OBS_IMPORT_EXCEPTIONS = {
+    ("obs/trace.py", "_annotation", "jax.profiler"),
+    ("obs/trace.py", "_annotation", "jax"),
+}
+
+_BANNED_IMPORT_ROOTS = {"jax", "jaxlib", "numpy", "np", "torch"}
+# attribute/function names that pull data off a device or register a
+# host callback — instrumentation observing through these would turn the
+# obs layer into a hidden sync (and a taint sink)
+_BANNED_NAMES = {
+    "device_get", "block_until_ready", "pure_callback", "io_callback",
+    "callback", "device_put", "asarray",
+}
+
+
+def _enclosing_functions(tree: ast.Module):
+    """Map every node id to the name of its innermost enclosing def."""
+    owner: dict[int, str] = {}
+
+    def walk(node, fn):
+        for ch in ast.iter_child_nodes(node):
+            nfn = ch.name if isinstance(
+                ch, (ast.FunctionDef, ast.AsyncFunctionDef)) else fn
+            owner[id(ch)] = nfn
+            walk(ch, nfn)
+
+    walk(tree, "")
+    return owner
+
+
+def lint_obs_purity(report: AnalysisReport | None = None, *,
+                    modules=None) -> AnalysisReport:
+    """Pin the observability layer to pure host-side stdlib Python.
+
+    ``modules`` (for tests) maps a display name to source text; default
+    is the real obs core read from the package sources.
+    """
+    rep = report or AnalysisReport(target="obs-purity")
+    if modules is None:
+        pkg = pathlib.Path(__file__).resolve().parents[1]
+        modules = {rel: (pkg / rel).read_text()
+                   for rel in OBS_CORE_MODULES}
+    for name, src in modules.items():
+        tree = ast.parse(src)
+        owner = _enclosing_functions(tree)
+        clean = True
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                mods = ([a.name for a in node.names]
+                        if isinstance(node, ast.Import)
+                        else [node.module or ""])
+                for mod in mods:
+                    root = mod.split(".")[0]
+                    if root not in _BANNED_IMPORT_ROOTS:
+                        continue
+                    fn = owner.get(id(node), "")
+                    if (name, fn, mod) in _OBS_IMPORT_EXCEPTIONS:
+                        continue
+                    clean = False
+                    rep.add(Finding(
+                        "obs-purity", "error", f"{name}:{node.lineno}",
+                        f"import of '{mod}' in the obs core — the "
+                        "tracer/ledger/metrics must stay stdlib-only "
+                        "(jax-free processes import them; only the lazy "
+                        "profiler hook may touch jax)",
+                    ))
+            elif isinstance(node, ast.Attribute) and \
+                    node.attr in _BANNED_NAMES:
+                fn = owner.get(id(node), "")
+                if (name, fn, "jax") in _OBS_IMPORT_EXCEPTIONS:
+                    continue  # inside the sanctioned profiler hook
+                clean = False
+                rep.add(Finding(
+                    "obs-purity", "error", f"{name}:{node.lineno}",
+                    f"'.{node.attr}' in the obs core — a device "
+                    "materializer or host callback would make "
+                    "instrumentation a hidden sync; obs records only "
+                    "host floats the drivers already read back",
+                ))
+        if clean:
+            rep.add(Finding(
+                "obs-purity", "info", name,
+                "stdlib-only, callback-free, no device materializers",
+            ))
     return rep
 
 

@@ -47,6 +47,8 @@ from .batched_summaries import (
     batched_local_summaries,
     pack_partitions,
 )
+from ..obs import metrics as _metrics
+from ..obs.trace import traced as _traced
 from .flatbuf import LANES, ROW_ALIGN, _rows_for
 from .logreg import LocalSummaries, local_summaries, deviance
 from .secure_agg import SecureAggregator, declassify_sum
@@ -157,6 +159,10 @@ class RoundReport:
     backoff_seconds: float = 0.0
     aborted_attempts: int = 0
     degraded: bool = False
+    # PUBLIC in-graph metric leaves, piggybacked on the round's one
+    # marked host sync (0.0 on paths that don't compute them in-graph)
+    grad_norm: float = 0.0
+    step_norm: float = 0.0
 
 
 def newton_step(
@@ -340,8 +346,14 @@ def _fused_secure_iteration(beta, key, X, X32, y, counts, lam,
     batched summaries -> batched protect (ONE encode+share launch over the
     S-leading flat buffers) -> single exact uint64 reduction over the
     institution axis (Algorithm 2) -> reveal of the *global* aggregate
-    only -> prox/Newton update.  Returns (beta_new, objective); the caller
-    reads only the scalar objective back to the host.
+    only -> prox/Newton update.  Returns ``(beta_new, objective,
+    grad_norm, step_norm)``; the caller reads the three PUBLIC scalars
+    back in the round's ONE host sync.  The metric leaves (||revealed
+    global gradient||, ||beta_new - beta||) are ALWAYS computed — they
+    derive from already-revealed aggregates, adding no declassification
+    — so the graph is identical whether or not observability consumes
+    them (the tracing-disabled bit-parity gate in
+    ``benchmarks/obs_overhead.py`` relies on this).
 
     ``points``/``include_count``/``summaries_backend`` are the coordinator
     hooks: the fused ``StudyCoordinator.step`` reveals from its *live*
@@ -376,7 +388,9 @@ def _fused_secure_iteration(beta, key, X, X32, y, counts, lam,
         beta, jnp.asarray(global_h, jnp.float64),
         jnp.asarray(global_g, jnp.float64), lam, l1,
     )
-    return beta_new, obj
+    grad_norm = jnp.linalg.norm(jnp.asarray(global_g, jnp.float64))
+    step_norm = jnp.linalg.norm(beta_new - beta)
+    return beta_new, obj, grad_norm, step_norm
 
 
 class SecureFitDriver:
@@ -494,6 +508,9 @@ class SecureFitDriver:
         self.reports: list[RoundReport] = []
         self._obj_prev = np.inf
         self.converged = False
+        # (grad_norm, step_norm) from the last fused round's piggybacked
+        # readback; None on the loop path (no in-graph metric leaves)
+        self._last_round_metrics: tuple[float, float] | None = None
         self.central_seconds = 0.0
         self.total_seconds = 0.0
         self.bytes_transmitted = 0
@@ -565,6 +582,7 @@ class SecureFitDriver:
         return self.live_points()
 
     # -- one Newton round ---------------------------------------------------
+    @_traced("newton")
     def step(self) -> RoundReport:
         if self.rounds == "scan":
             # a supervised "round" in scan mode is one scan block: the
@@ -608,6 +626,7 @@ class SecureFitDriver:
         else:
             self._obj_prev = obj
             self.beta = make_beta_new()
+        gn, sn = self._last_round_metrics or (0.0, 0.0)
         report = RoundReport(
             self.iteration,
             [self.names[j] for j in cohort],
@@ -615,12 +634,20 @@ class SecureFitDriver:
             list(points or ()),
             obj,
             nbytes,
+            grad_norm=gn,
+            step_norm=sn,
         )
         self.reports.append(report)
+        _metrics.observe_round(
+            "secure_fit", nbytes, objective=obj,
+            grad_norm=gn if self._last_round_metrics else None,
+            step_norm=sn if self._last_round_metrics else None,
+        )
         return report
 
     def _round_loop(self, parts, points):
         """The per-institution oracle walk (Algorithm 1 steps 3-16)."""
+        self._last_round_metrics = None
         locals_: list[LocalSummaries] = [
             local_summaries(self.beta, Xj, yj) for Xj, yj in parts
         ]
@@ -707,16 +734,22 @@ class SecureFitDriver:
             # always used (and the cache-friendliest static points value)
             pts = None
         self.key, sub = jax.random.split(self.key)
-        beta_new, obj = _fused_secure_iteration(
+        beta_new, obj, grad_norm, step_norm = _fused_secure_iteration(
             self.beta, sub, packed.X, packed.X32, packed.y, packed.counts,
             self.lam, self.agg, self.protect, self.l1,
             self.agg.scheme.interpret, points=pts,
             summaries_backend=self.summaries_backend,
         )
-        # host-sync: the one objective readback per fused iteration
+        # host-sync: the one readback per fused iteration — objective plus
+        # the PUBLIC in-graph metric leaves, one transfer
+        obj, grad_norm, step_norm = jax.device_get(
+            (obj, grad_norm, step_norm)
+        )
+        self._last_round_metrics = (float(grad_norm), float(step_norm))
         return float(obj), lambda: beta_new
 
     # -- scan-resident blocks ------------------------------------------------
+    @_traced("newton")
     def step_block(self, num_rounds: int | None = None
                    ) -> list[RoundReport]:
         """Up to ``num_rounds`` secure rounds as ONE ``lax.scan`` dispatch.
@@ -761,7 +794,7 @@ class SecureFitDriver:
         pts = self._post_protect_points(points)
         if pts is not None and len(pts) == self.agg.scheme.num_shares:
             pts = None  # the all-live first-t default (cache-friendly)
-        carry, objs, actives = fit_scan_block(
+        carry, objs, actives, gnorms, snorms = fit_scan_block(
             self.beta,
             jnp.asarray(self._obj_prev, jnp.float64),
             jnp.asarray(self.converged),
@@ -776,11 +809,13 @@ class SecureFitDriver:
             num_rounds=num_rounds, num_parts=len(parts),
             max_rounds=num_rounds,
         )
-        # host-sync: the block's ONE readback — trace + scalar carry in a
-        # single transfer (beta stays on device for the next block)
-        objs, actives, obj_prev_h, conv_h, base_h = jax.device_get(
-            (objs, actives, carry[1], carry[2], carry[4])
-        )
+        # host-sync: the block's ONE readback — trace + metric leaves +
+        # scalar carry in a single transfer (beta stays on device)
+        objs, actives, gnorms, snorms, obj_prev_h, conv_h, base_h = \
+            jax.device_get(
+                (objs, actives, gnorms, snorms,
+                 carry[1], carry[2], carry[4])
+            )
         new_reports: list[RoundReport] = []
         for r in range(num_rounds):
             if not actives[r]:
@@ -795,9 +830,15 @@ class SecureFitDriver:
                 list(points or ()),
                 float(objs[r]),
                 nbytes,
+                grad_norm=float(gnorms[r]),
+                step_norm=float(snorms[r]),
             )
             self.reports.append(report)
             new_reports.append(report)
+            _metrics.observe_round(
+                "secure_fit_scan", nbytes, objective=report.objective,
+                grad_norm=report.grad_norm, step_norm=report.step_norm,
+            )
         self.beta = carry[0]
         self._obj_prev = float(obj_prev_h)
         self.converged = bool(conv_h)

@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs.trace import traced as _traced
 from .batched_summaries import (
     BACKENDS as SUMMARY_BACKENDS,
     pack_cache_evict,
@@ -111,6 +113,7 @@ class ComputationCenter:
     def receive(self, share_slice):
         self._stash.append(share_slice)
 
+    @_traced("aggregate")
     def aggregate_local(self, field):
         """Algorithm 2 run at this center: share-wise sum of its slices.
 
@@ -251,6 +254,9 @@ class StudyCoordinator:
         self.reports: list[RoundReport] = []
         self._obj_prev = np.inf
         self.converged = False
+        # (grad_norm, step_norm) from the last fused round's piggybacked
+        # readback; None on the loop path (no in-graph metric leaves)
+        self._last_round_metrics: tuple[float, float] | None = None
 
     # -- fault/elasticity hooks ----------------------------------------------
     def cohort(self) -> list[Institution]:
@@ -340,6 +346,7 @@ class StudyCoordinator:
             h()
 
     # -- one Newton round ------------------------------------------------------
+    @_traced("newton")
     def step(self, fused: bool | None = None) -> RoundReport:
         """One secure Newton round.  ``fused=None`` uses the constructor
         setting; an explicit value overrides it for this round only (the
@@ -389,6 +396,7 @@ class StudyCoordinator:
 
     def _round_loop(self, cohort):
         """The per-institution oracle walk (paper-shaped deployment)."""
+        self._last_round_metrics = None
         for c in self.centers:
             c.clear()
         plains = []
@@ -476,16 +484,22 @@ class StudyCoordinator:
             points = None
         packed = pack_partitions([(i.X, i.y) for i in cohort])
         self.key, sub = jax.random.split(self.key)
-        beta_new, obj = _fused_secure_iteration(
+        beta_new, obj, grad_norm, step_norm = _fused_secure_iteration(
             self.beta, sub, packed.X, packed.X32, packed.y, packed.counts,
             self.lam, self.agg, self.protect, 0.0,
             self.agg.scheme.interpret, points=points, include_count=True,
             summaries_backend=self.summaries_backend,
         )
-        # host-sync: the round's one objective readback (secure_fit's twin)
+        # host-sync: the round's one readback (secure_fit's twin) —
+        # objective plus the PUBLIC in-graph metric leaves, one transfer
+        obj, grad_norm, step_norm = jax.device_get(
+            (obj, grad_norm, step_norm)
+        )
+        self._last_round_metrics = (float(grad_norm), float(step_norm))
         return float(obj), lambda: beta_new
 
     # -- scan-resident blocks --------------------------------------------------
+    @_traced("newton")
     def step_block(self, num_rounds: int | None = None
                    ) -> list[RoundReport]:
         """Up to ``num_rounds`` fused cohort rounds as ONE ``lax.scan``.
@@ -526,7 +540,7 @@ class StudyCoordinator:
         else:
             points = None
         packed = pack_partitions([(i.X, i.y) for i in cohort])
-        carry, objs, actives = fit_scan_block(
+        carry, objs, actives, gnorms, snorms = fit_scan_block(
             self.beta,
             jnp.asarray(self._obj_prev, jnp.float64),
             jnp.asarray(self.converged),
@@ -541,11 +555,13 @@ class StudyCoordinator:
             num_rounds=num_rounds, num_parts=len(cohort),
             max_rounds=num_rounds,
         )
-        # host-sync: the block's ONE readback — trace + scalar carry in a
-        # single transfer (beta stays on device for the next block)
-        objs, actives, obj_prev_h, conv_h, base_h = jax.device_get(
-            (objs, actives, carry[1], carry[2], carry[4])
-        )
+        # host-sync: the block's ONE readback — trace + metric leaves +
+        # scalar carry in a single transfer (beta stays on device)
+        objs, actives, gnorms, snorms, obj_prev_h, conv_h, base_h = \
+            jax.device_get(
+                (objs, actives, gnorms, snorms,
+                 carry[1], carry[2], carry[4])
+            )
         new_reports: list[RoundReport] = []
         for r in range(num_rounds):
             if not actives[r]:
@@ -559,8 +575,15 @@ class StudyCoordinator:
                 [c.index for c in self.centers if c.online],
                 float(objs[r]),
                 nbytes,
+                grad_norm=float(gnorms[r]),
+                step_norm=float(snorms[r]),
             ))
             self.reports.append(new_reports[-1])
+            _metrics.observe_round(
+                "coordinator_scan", nbytes,
+                objective=float(objs[r]),
+                grad_norm=float(gnorms[r]), step_norm=float(snorms[r]),
+            )
         self.beta = carry[0]
         self._obj_prev = float(obj_prev_h)
         self.converged = bool(conv_h)
@@ -582,6 +605,7 @@ class StudyCoordinator:
         else:
             self._obj_prev = obj
             self.beta = make_beta_new()
+        gn, sn = self._last_round_metrics or (0.0, 0.0)
         report = RoundReport(
             self.iteration,
             [i.name for i in cohort],
@@ -589,8 +613,15 @@ class StudyCoordinator:
             [c.index for c in self.centers if c.online],
             obj,
             nbytes,
+            grad_norm=gn,
+            step_norm=sn,
         )
         self.reports.append(report)
+        _metrics.observe_round(
+            "coordinator", nbytes, objective=obj,
+            grad_norm=gn if self._last_round_metrics else None,
+            step_norm=sn if self._last_round_metrics else None,
+        )
         return report
 
     def run(self, max_iter: int = 50) -> np.ndarray:

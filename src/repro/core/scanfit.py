@@ -77,9 +77,14 @@ def fit_scan_block(beta, obj_prev, converged, iters, key, round_base,
     The single-λ mirror of the selection sweep's ``_cv_sweep_block``:
     every slot runs the full protect -> aggregate -> reveal -> Newton
     round in-graph, with the protect rng folded from ``(key, slot)``.
-    Returns ``(carry, objs, actives)`` where carry is
-    ``(beta, obj_prev, converged, iters, slot)`` and the ``(num_rounds,)``
-    objective/active traces are the caller's only host readback.
+    Returns ``(carry, objs, actives, grad_norms, step_norms)`` where
+    carry is ``(beta, obj_prev, converged, iters, slot)`` and the
+    ``(num_rounds,)`` objective/active/metric traces are the caller's
+    only host readback.  The metric leaves (||revealed global
+    gradient||, ||beta_new - beta|| per executed slot; 0.0 on skipped
+    slots) are ALWAYS emitted — they derive from already-revealed
+    aggregates, so the graph is identical whether or not observability
+    consumes them.
 
     Semantics pinned to the per-round drivers:
 
@@ -134,21 +139,27 @@ def fit_scan_block(beta, obj_prev, converged, iters, key, round_base,
             lam, l1,
         )
         freeze = conv_new | ~active
+        # PUBLIC metric leaves riding the existing trace readback: both
+        # derive from the revealed global aggregate, never from shares
+        gnorm = jnp.linalg.norm(jnp.asarray(g, jnp.float64))
+        snorm = jnp.linalg.norm(beta_new - beta)
         beta = jnp.where(freeze, beta, beta_new)
         obj_prev = jnp.where(freeze, obj_prev, obj)
         iters = iters + active.astype(jnp.int32)
-        return (beta, obj_prev, conv_new, iters, slot + 1), (obj, active)
+        return ((beta, obj_prev, conv_new, iters, slot + 1),
+                (obj, active, gnorm, snorm))
 
     def skip_fn(carry):
         beta, obj_prev, converged, iters, slot = carry
+        zero = jnp.zeros((), jnp.float64)
         return ((beta, obj_prev, converged, iters, slot + 1),
-                (obj_prev, jnp.zeros((), bool)))
+                (obj_prev, jnp.zeros((), bool), zero, zero))
 
     def settled(carry):
         return carry[2] | (carry[3] >= max_rounds)
 
     carry0 = (beta, obj_prev, converged, iters, round_base)
-    carry, (objs, actives) = scan_rounds(
+    carry, (objs, actives, grad_norms, step_norms) = scan_rounds(
         round_fn, skip_fn, settled, carry0, num_rounds
     )
-    return carry, objs, actives
+    return carry, objs, actives, grad_norms, step_norms

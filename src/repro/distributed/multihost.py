@@ -42,6 +42,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from ..obs import ledger as _ledger
+from ..obs import trace as _trace
 from .compat import axis_size, make_mesh, shard_map
 from .sharding import POD_AXIS, SHARE_AXIS
 
@@ -99,12 +101,8 @@ def pod_share_mesh(num_pods: int, num_centers: int):
     return make_mesh((num_pods, num_centers), (POD_AXIS, SHARE_AXIS))
 
 
-@functools.partial(
-    jax.jit, static_argnames=("scheme", "codec", "points", "share_axis",
-                              "dtype")
-)
-def _distributed_reveal(agg_slice, scheme, codec, points, share_axis,
-                        dtype):
+def _distributed_reveal_impl(agg_slice, scheme, codec, points, share_axis,
+                             dtype):
     """Lagrange reconstruction as a SHARE_AXIS collective.
 
     ``agg_slice`` is this center's aggregated share slice (R, rows, 128)
@@ -132,6 +130,31 @@ def _distributed_reveal(agg_slice, scheme, codec, points, share_axis,
     summed = jax.lax.psum(partial, share_axis) % field._bcast(partial, 0)
     signed = crt_combine_signed(summed, field)
     return (signed.astype(jnp.float64) / codec.scale).astype(dtype)
+
+
+# the pjit equation must keep the exact name the static gate's
+# declassification rules match on
+_distributed_reveal_impl.__name__ = "_distributed_reveal"
+_distributed_reveal_impl.__qualname__ = "_distributed_reveal"
+_distributed_reveal_jit = functools.partial(
+    jax.jit, static_argnames=("scheme", "codec", "points", "share_axis",
+                              "dtype")
+)(_distributed_reveal_impl)
+
+
+def _distributed_reveal(agg_slice, scheme, codec, points, share_axis,
+                        dtype):
+    """Host wrapper: privacy-ledger hook + the jitted collective reveal.
+
+    The runtime audit counts per Python-level invocation — once per
+    trace of the enclosing ``shard_map`` graph (see
+    :func:`repro.core.secure_agg.declassify_sum` for semantics).
+    """
+    _ledger.record_site("_distributed_reveal", what="share_axis_reveal",
+                        shape=agg_slice.shape,
+                        threshold=scheme.threshold)
+    return _distributed_reveal_jit(agg_slice, scheme, codec, points,
+                                   share_axis, dtype)
 
 
 def secure_psum_2d(tree, key, aggregator=None, dtype=jnp.float32,
@@ -297,4 +320,6 @@ def run_scanned_rounds(num_pods: int, tree, key, num_rounds: int,
         ),
         mesh=mesh, in_specs=(), out_specs=P(), check_vma=False,
     ))
-    return fn()
+    with _trace.span("scan_block", "run_scanned_rounds",
+                     num_pods=num_pods, num_rounds=num_rounds):
+        return fn()

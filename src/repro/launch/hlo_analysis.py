@@ -18,7 +18,9 @@ HLO text itself:
   the 1/D-sized shard); all-gather counts its result bytes (the full
   gathered buffer).  The conventions are mutually consistent: a
   reduce-scatter + all-gather pair over the same logical buffer sums to
-  exactly the all-reduce figure.
+  exactly the all-reduce figure.  The factors themselves live in
+  ``repro.obs.metrics`` — the ONE definition shared with the round
+  drivers' byte gauges, pinned by ``tests/test_byte_accounting.py``.
 
 While trip counts are recovered from the loop condition's ROOT compare
 constant; nested loops multiply.  All numbers are per-device.
@@ -28,6 +30,12 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
+
+from ..obs.metrics import (
+    ALL_GATHER_FACTOR,
+    ALL_REDUCE_FACTOR,
+    REDUCE_SCATTER_FACTOR,
+)
 
 __all__ = ["HloCost", "analyze_hlo", "DTYPE_BYTES"]
 
@@ -430,10 +438,16 @@ def analyze_hlo(text: str) -> HloCost:
                     # the ring moves the full OPERAND; the result is the
                     # 1/D shard (so RS + AG == all-reduce's 2x result)
                     nbytes = _operand_bytes(op, shapes) or result_b
-                    factor = 1.0
+                    factor = REDUCE_SCATTER_FACTOR
+                elif op.kind == "all-reduce":
+                    nbytes = result_b
+                    factor = ALL_REDUCE_FACTOR
+                elif op.kind == "all-gather":
+                    nbytes = result_b
+                    factor = ALL_GATHER_FACTOR
                 else:
                     nbytes = result_b
-                    factor = 2.0 if op.kind == "all-reduce" else 1.0
+                    factor = 1.0
                 total.collective_bytes[op.kind] += factor * nbytes
                 total.collective_count[op.kind] += 1
                 total.bytes += result_b

@@ -1,0 +1,26 @@
+"""Protocol observability: span tracing, metrics, runtime privacy audit.
+
+Three stdlib-only building blocks, threaded through every secure driver:
+
+* :mod:`repro.obs.trace`  — ring-buffered host span tracer with JSONL /
+  Chrome-trace exporters and an optional ``jax.profiler`` annotation
+  hook (``trace.enable()`` / ``trace.span(kind)``);
+* :mod:`repro.obs.ledger` — the runtime privacy-audit ledger: typed
+  execution counters on every ``_reveal_flat`` / ``_distributed_reveal``
+  / ``declassify_sum`` (and ``_protect_flat``) boundary;
+* :mod:`repro.obs.metrics` — labeled counters/gauges + Prometheus
+  textfile export, and the shared ring-collective byte conventions.
+
+The heavier pieces import jax and live behind the CLI:
+``python -m repro.obs audit`` (see :mod:`repro.obs.audit`) reconciles
+the runtime ledger against the static privacy gate's expected
+declassification set for every certified driver spec.
+
+This package's core modules MUST NOT import jax at module level, call
+host callbacks, or materialize device values — ``repro.core`` imports
+them on its hot path and the jax-free supervisor layer uses the tracer;
+``repro.analysis.lints.lint_obs_purity`` enforces this statically.
+"""
+from . import ledger, metrics, trace  # noqa: F401
+
+__all__ = ["ledger", "metrics", "trace"]

@@ -66,6 +66,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+from ..obs import metrics as _metrics
+from ..obs.trace import span as _span, traced as _traced
 from .managers import (
     FailureInjector,
     HeartbeatMonitor,
@@ -491,6 +493,7 @@ class RoundSupervisor:
         for _ in self.driver.dead_center_indices():
             self.driver.provision_center()
 
+    @_traced("round")
     def step(self) -> SupervisedRound:
         """One supervised round: events -> attempts -> telemetry.
 
@@ -526,7 +529,10 @@ class RoundSupervisor:
                     and attempt + 1 >= pol.reprovision_after):
                 self._reprovision_dead_centers()
             wait = pol.backoff_base * pol.backoff_factor ** attempt
-            self.clock.advance(wait)
+            with _span("retry", "RoundSupervisor.backoff",
+                       round_no=self.round_no, attempt=attempt,
+                       backoff_s=wait):
+                self.clock.advance(wait)
             retries += 1
             backoff += wait
 
@@ -543,6 +549,10 @@ class RoundSupervisor:
             report.degraded = degraded
         self.total_retries += retries
         self.total_backoff += backoff
+        if retries:
+            _metrics.inc("repro_retries_total", retries)
+        if aborted:
+            _metrics.inc("repro_aborted_attempts_total", aborted)
         record = SupervisedRound(
             round_no=self.round_no,
             attempts=attempts,

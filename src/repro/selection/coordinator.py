@@ -30,6 +30,7 @@ import numpy as np
 
 from ..core.protocol import Institution, StudyCoordinator
 from ..core.secure_agg import SecureAggregator
+from ..obs.trace import traced as _traced
 from .folds import assign_folds
 from .path import PathDriver, PathSettings
 from .report import PathReport
@@ -107,6 +108,7 @@ class SelectionCoordinator:
         return self.driver.finished(self.state)
 
     # -- the sweep ------------------------------------------------------------
+    @_traced("selection")
     def step_chunk(self):
         """Advance the path by one λ chunk on the CURRENT cohort.
 

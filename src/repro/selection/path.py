@@ -62,6 +62,8 @@ from ..core.newton import (
 )
 from ..core.scanfit import scan_rounds
 from ..core.secure_agg import SecureAggregator, declassify_sum
+from ..obs import metrics as _metrics
+from ..obs.trace import traced as _traced
 from .folds import assign_folds, pack_fold_ids
 from .report import PathReport, one_se_rule
 
@@ -291,6 +293,7 @@ class PathDriver:
         return int(state["next_chunk"]) >= self.num_chunks()
 
     # -- one chunk ------------------------------------------------------------
+    @_traced("selection")
     def run_chunk(self, state: dict, parts: Sequence, fold_parts: Sequence,
                   points: Sequence[int] | None = None,
                   num_live_centers: int | None = None,
@@ -399,6 +402,9 @@ class PathDriver:
             int(state["bytes_total"]) + executed * bytes_per_round,
             np.int64,
         )
+        if executed:
+            _metrics.observe_round("selection_path", bytes_per_round,
+                                   rounds=executed)
         if traces is not None:
             traces.append({
                 "chunk": chunk_idx,
