@@ -12,6 +12,9 @@ Dispatches on content:
 * **span run ledgers** (``*.jsonl`` written by
   ``repro.obs.trace.SpanTracer.export_jsonl``) — the per-kind wall-time
   summary table plus the slowest individual spans.
+
+A missing or malformed file prints one ``error:`` line and moves on to
+the remaining files; exit status is 1 if any file failed to render.
 """
 import json
 import os
@@ -88,21 +91,29 @@ def show_span_ledger(path: str):
                   + (f"  [{attrs}]" if attrs else ""))
 
 
-def show(path: str):
+def show(path: str) -> bool:
     print(f"== {path}")
-    if path.endswith(".jsonl"):
-        show_span_ledger(path)
-        return
-    with open(path) as fh:
-        data = json.load(fh)
-    if isinstance(data, dict) and "hlo_analysis" in data:
-        show_roofline(data)
-    elif isinstance(data, list):
-        show_bench_rows(data)
-    else:
-        print(json.dumps(data, indent=2))
+    try:
+        if path.endswith(".jsonl"):
+            show_span_ledger(path)
+            return True
+        with open(path) as fh:
+            data = json.load(fh)
+        if isinstance(data, dict) and "hlo_analysis" in data:
+            show_roofline(data)
+        elif isinstance(data, list):
+            show_bench_rows(data)
+        else:
+            print(json.dumps(data, indent=2))
+        return True
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"error: {path}: {e}")
+        return False
+
+
+def main(paths) -> int:
+    return 0 if all([show(f) for f in paths]) else 1
 
 
 if __name__ == "__main__":
-    for f in sys.argv[1:]:
-        show(f)
+    sys.exit(main(sys.argv[1:]))

@@ -9,7 +9,10 @@
 # fused Pallas pipeline is not slower than the reference oracle.  Then
 # runs the e2e fused-Newton smoke (--quick) and asserts secure ==
 # centralized beta (R^2 = 1) and fused == pre-fusion-loop beta within
-# fixed-point quantization, the secure_psum smoke (sharded flat wire
+# fixed-point quantization plus COLLECTIVE PARITY against the committed
+# smoke baselines (per-round bytes exact, fused-path wall clock within
+# 3% — the SecureCollective chain must not drift), the secure_psum
+# smoke (sharded flat wire
 # payload <= 0.55x the per-leaf uint64 tree, bit-equal reveals), the
 # lambda-path smoke, the fault-overhead smoke (supervised rounds at
 # negligible overhead + three chaos schedules recovering to the
@@ -75,6 +78,13 @@ print("bench smoke OK")
 EOF
 
 echo "== e2e secure fit smoke (fused vs pre-fusion loop + coordinator) =="
+# collective parity baseline: snapshot the committed smoke rows BEFORE
+# the refresh overwrites them (the fresh run is compared against this
+# below — bytes exact, wall clock within 3%)
+E2E_BASELINE="$(mktemp)"
+if [[ -f BENCH_e2e_secure_fit_smoke.json ]]; then
+    cp BENCH_e2e_secure_fit_smoke.json "$E2E_BASELINE"
+fi
 python benchmarks/e2e_secure_fit.py --quick \
     --json BENCH_e2e_secure_fit_smoke.json >/dev/null
 
@@ -109,6 +119,48 @@ if failures:
     print("\n".join("FAIL: " + f for f in failures))
     sys.exit(1)
 print("e2e smoke OK")
+EOF
+
+echo "== collective parity (fresh rows vs committed smoke baselines) =="
+# the SecureCollective refactor contract: the unified chain moves the
+# SAME bytes per round (round_bytes is a static size model — any drift
+# is a wire/telemetry change, not noise) and costs the same wall clock
+# within 3% on the fused paths
+E2E_BASELINE="$E2E_BASELINE" python - <<'EOF'
+import json, os, sys
+
+base_path = os.environ["E2E_BASELINE"]
+if not os.path.exists(base_path) or os.path.getsize(base_path) == 0:
+    print("collective parity SKIPPED: no committed baseline to compare")
+    sys.exit(0)
+base = {r["path"]: r for r in json.load(open(base_path))
+        if isinstance(r, dict) and "path" in r}
+fresh = {r["path"]: r for r in
+         json.load(open("BENCH_e2e_secure_fit_smoke.json"))
+         if isinstance(r, dict) and "path" in r}
+GATED_WALL = ("fused", "coordinator_fused", "coordinator_fused_f32")
+failures = []
+for path, b in sorted(base.items()):
+    f = fresh.get(path)
+    if f is None:
+        failures.append(f"path '{path}' missing from fresh smoke rows")
+        continue
+    if f["bytes_transmitted"] != b["bytes_transmitted"]:
+        failures.append(
+            f"{path}: per-round bytes moved "
+            f"{b['bytes_transmitted']} -> {f['bytes_transmitted']} "
+            "(round_bytes is static: this is a wire or telemetry change)")
+    ratio = f["seconds_per_iter"] / b["seconds_per_iter"]
+    gated = path in GATED_WALL
+    print(f"  {path:<22} bytes {'==':>2}  wall {ratio:.3f}x"
+          + ("" if gated else "  (informational)"))
+    if gated and ratio > 1.03:
+        failures.append(
+            f"{path}: {ratio:.3f}x baseline wall clock (> 1.03x gate)")
+if failures:
+    print("\n".join("FAIL: " + f for f in failures))
+    sys.exit(1)
+print("collective parity OK")
 EOF
 
 echo "== secure_psum smoke (flat sharded wire vs per-leaf uint64 tree) =="

@@ -3,9 +3,9 @@
 # run the protocol lints (one-host-sync-per-block, fixed-point headroom,
 # mesh axes, Pallas VMEM knobs, obs purity — the tracer/ledger/metrics
 # modules stay stdlib-only with zero callbacks or device
-# materializers), then confirm the deliberately-leaky fixtures are
-# CAUGHT.  Pure tracing + AST + arithmetic — no kernel executes, so the
-# whole gate runs in seconds.
+# materializers, collective boundary ownership), then confirm the
+# deliberately-leaky fixtures are CAUGHT.  Pure tracing + AST +
+# arithmetic — no kernel executes, so the whole gate runs in seconds.
 #
 # The RUNTIME half of the privacy story — reconciling executed
 # declassifications against these certified graphs — is
@@ -20,5 +20,15 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# repo hygiene: compiled bytecode must never be tracked (it is
+# machine-specific noise and bloats every diff); .gitignore keeps new
+# files out, this keeps anyone from force-adding them back
+if git ls-files -- '*.pyc' '*__pycache__*' | grep -q .; then
+    echo "static_checks: tracked Python bytecode found:" >&2
+    git ls-files -- '*.pyc' '*__pycache__*' >&2
+    echo "static_checks: run 'git rm -r --cached' on the paths above" >&2
+    exit 1
+fi
 
 python -m repro.analysis "$@"

@@ -19,11 +19,23 @@ Module map:
 * ``lints``    — the protocol lints: one-host-sync-per-block AST pass
   over the scan drivers, callback census of the round graphs, symbolic
   fixed-point headroom proof from config bounds, mesh-axis allowlist,
-  and the Pallas VMEM knob check (``kernels.tuning`` model, no
-  compilation).
+  the Pallas VMEM knob check (``kernels.tuning`` model, no
+  compilation), and the collective boundary-ownership pass (the
+  protect/reveal wrappers may only be CALLED from
+  ``core/collective.py`` + the sanctioned audit fixture/kernel layer).
 * ``drivers``  — the certified surface: ``DriverSpec`` builders tracing
   every secure driver round (fused, scan, selection sweep, 1D/2D SPMD
   ``secure_psum``) with the taint labels of their inputs.
+
+Everything this gate certifies hangs off ONE chain: every driver routes
+through :class:`repro.core.collective.SecureCollective`, whose four
+named jit boundaries (``_protect_flat`` / ``_reveal_flat`` /
+``_distributed_reveal`` / ``declassify_sum``) are simultaneously the
+taint-rule anchors here, the runtime ledger's hook points
+(``repro.obs.ledger``), the census the runtime audit reconciles
+(``python -m repro.obs audit``), and the ``round_bytes`` telemetry
+model — so a certified graph is the only graph a driver can execute,
+and the ownership lint turns any bypass into a gate error.
 * ``fixtures`` — deliberately-leaky driver variants the gate must FAIL
   on (negative controls, run by the CLI on every invocation).
 * ``report``   — ``Finding``/``AnalysisReport`` records shared by all

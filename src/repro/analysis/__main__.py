@@ -5,7 +5,8 @@ Runs, in order:
 1. the taint verifier + per-graph lints (callback census, mesh axes)
    over every certified driver spec (``drivers.all_driver_specs``),
 2. the source-level and config-level lints (host-sync AST pass,
-   fixed-point headroom proof, Pallas knob check, obs purity pass),
+   fixed-point headroom proof, Pallas knob check, obs purity pass,
+   collective boundary-ownership pass),
 3. the leak fixtures (``fixtures.leak_fixture_specs``) — deliberately
    broken drivers the verifier MUST flag; a fixture passing clean means
    the gate itself regressed.
@@ -59,8 +60,8 @@ def main(argv=None) -> int:
 
     from .drivers import all_driver_specs
     from .fixtures import leak_fixture_specs
-    from .lints import (SummaryBounds, lint_headroom, lint_host_sync,
-                        lint_kernel_knobs, lint_obs_purity)
+    from .lints import (SummaryBounds, lint_collective_sites, lint_headroom,
+                        lint_host_sync, lint_kernel_knobs, lint_obs_purity)
 
     reports = []
     failed = False
@@ -80,7 +81,8 @@ def main(argv=None) -> int:
         ))
         reports.append(lint_kernel_knobs())
         reports.append(lint_obs_purity())
-        failed |= not all(r.ok for r in reports[-4:])
+        reports.append(lint_collective_sites())
+        failed |= not all(r.ok for r in reports[-5:])
 
     caught = []
     if not args.no_fixtures:

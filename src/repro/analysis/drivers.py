@@ -23,6 +23,13 @@ taint.  The five ISSUE-mandated drivers map to eight specs:
 Fused specs trace twice — ``protect="both"`` (everything shared) and
 ``protect="gradient"`` (the paper's pragmatic mode, exercising the
 ``declassify_sum`` plaintext-aggregation annotation).
+
+Every spec's graph routes through the ONE
+:class:`repro.core.collective.SecureCollective` chain, so the named
+boundary pjits the taint rules key on (``_protect_flat`` /
+``_reveal_flat`` / ``_distributed_reveal`` / ``declassify_sum``) are the
+same four call sites the runtime ledger hooks and the byte telemetry
+account — certifying a driver here certifies the only chain it can use.
 """
 from __future__ import annotations
 
@@ -70,9 +77,9 @@ def toy_parts(num_parts: int = 3, n: int = 8, d: int = 4):
 
 
 def _aggregator():
-    from ..core.secure_agg import SecureAggregator
+    from ..core.collective import SecureCollective
 
-    return SecureAggregator(backend="pallas")
+    return SecureCollective(backend="pallas")
 
 
 def _packed(num_parts=3, n=8, d=4):
@@ -270,7 +277,7 @@ def _psum_spec(name: str, reveal: str, out: str, num_pods: int = 4):
     def build():
         from jax.sharding import AbstractMesh, PartitionSpec as P
 
-        from ..core.secure_agg import secure_psum
+        from ..core.collective import secure_psum
         from ..distributed.compat import shard_map
         from ..distributed.sharding import POD_AXIS
 
@@ -292,7 +299,7 @@ def _psum_spec(name: str, reveal: str, out: str, num_pods: int = 4):
     def runner():
         from jax.sharding import PartitionSpec as P
 
-        from ..core.secure_agg import secure_psum
+        from ..core.collective import secure_psum
         from ..distributed.compat import shard_map
         from ..distributed.multihost import pod_mesh
         from ..distributed.sharding import POD_AXIS

@@ -28,6 +28,15 @@ records (see ``report.py``):
 * :func:`lint_kernel_knobs` — the compiled-path Pallas blocking knobs
   checked against the ``kernels.tuning`` VMEM working-set model at the
   gate's dims, without compiling anything.
+* :func:`lint_collective_sites` — AST pass pinning the PR-10 ownership
+  contract: the protect/reveal boundary wrappers (``_protect_flat`` /
+  ``_reveal_flat`` / ``_distributed_reveal``) may be CALLED only inside
+  ``core/collective.py`` — the one chain every driver routes through —
+  plus the two sanctioned exceptions (the deliberate-leak audit fixture
+  in ``obs/audit.py``; the raw kernel layer ``kernels/ops.py``).  A new
+  call site anywhere else is a driver growing its own private
+  protect -> reveal chain, exactly the drift this layer exists to stop.
+  Imports/re-exports are fine — only ``ast.Call`` nodes count.
 * :func:`lint_obs_purity` — AST pass over the observability core
   modules (``obs/trace.py``, ``obs/ledger.py``, ``obs/metrics.py``):
   stdlib-only imports (so the jax-free runtime layer can use them, and
@@ -56,6 +65,8 @@ __all__ = [
     "lint_mesh_axes",
     "lint_kernel_knobs",
     "lint_obs_purity",
+    "lint_collective_sites",
+    "BOUNDARY_CALL_EXEMPT",
 ]
 
 
@@ -522,6 +533,66 @@ def lint_obs_purity(report: AnalysisReport | None = None, *,
                 "obs-purity", "info", name,
                 "stdlib-only, callback-free, no device materializers",
             ))
+    return rep
+
+
+# -- collective ownership lint ---------------------------------------------
+
+# the jit-boundary wrappers only core/collective.py may invoke
+_BOUNDARY_FNS = ("_protect_flat", "_reveal_flat", "_distributed_reveal")
+
+# files (package-relative) where calling a boundary wrapper is sanctioned:
+# the owner, the deliberate-leak audit fixture, and the raw kernel layer
+BOUNDARY_CALL_EXEMPT = (
+    "core/collective.py",
+    "obs/audit.py",
+    "kernels/ops.py",
+)
+
+
+def lint_collective_sites(report: AnalysisReport | None = None, *,
+                          modules=None) -> AnalysisReport:
+    """Every protect/reveal boundary CALL lives in core/collective.py.
+
+    Walks the package sources (or ``modules``, a display-name -> source
+    map, for tests) and flags any ``ast.Call`` whose callee — bare name
+    or attribute — is one of the three boundary wrappers, outside the
+    exempt files.  Re-exporting or importing the names is allowed (the
+    compat surface in ``core/secure_agg.py`` does exactly that); only
+    invoking them builds a second chain.
+    """
+    rep = report or AnalysisReport(target="collective-sites")
+    if modules is None:
+        pkg = pathlib.Path(__file__).resolve().parents[1]
+        modules = {
+            str(p.relative_to(pkg)): p.read_text()
+            for p in sorted(pkg.rglob("*.py"))
+        }
+    calls = 0
+    for name, src in modules.items():
+        exempt = name in BOUNDARY_CALL_EXEMPT
+        for node in ast.walk(ast.parse(src)):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _call_callee(node)
+            if callee not in _BOUNDARY_FNS:
+                continue
+            calls += 1
+            if not exempt:
+                rep.add(Finding(
+                    "collective-sites", "error", f"{name}:{node.lineno}",
+                    f"direct call to boundary wrapper '{callee}' outside "
+                    "core/collective.py — drivers must route through "
+                    "SecureCollective so the one chain stays the only "
+                    "chain (ledger hooks, taint rules and byte telemetry "
+                    "all anchor there)",
+                ))
+    rep.add(Finding(
+        "collective-sites", "info", "collective-sites",
+        f"{calls} boundary call site(s) scanned; owner + "
+        f"{len(BOUNDARY_CALL_EXEMPT) - 1} sanctioned exceptions "
+        "(obs/audit.py leak fixture, kernels/ops.py raw layer)",
+    ))
     return rep
 
 

@@ -20,6 +20,7 @@ from .flatbuf import (
     unpack_pytree_tile,
 )
 from .shamir import ShamirScheme
+from .collective import SecureCollective, declassify_sum
 from .secure_agg import (
     FlatProtected,
     OUT_MODES,
@@ -49,7 +50,8 @@ __all__ = [
     "PackedPartitions", "batched_local_summaries", "pack_partitions",
     "CVSummaries", "batched_cv_summaries",
     "pack_cache_clear", "pack_cache_evict", "pack_cache_len",
-    "REVEAL_MODES", "SecureAggregator", "check_aggregation_headroom",
+    "REVEAL_MODES", "SecureAggregator", "SecureCollective",
+    "check_aggregation_headroom", "declassify_sum",
     "secure_add", "secure_psum", "secure_scale_by_public",
     "LocalSummaries", "local_summaries", "predict_proba", "deviance",
     "FitResult", "SecureFitDriver", "centralized_fit", "newton_step",

@@ -49,9 +49,8 @@ from .batched_summaries import (
 )
 from ..obs import metrics as _metrics
 from ..obs.trace import traced as _traced
-from .flatbuf import LANES, ROW_ALIGN, _rows_for
 from .logreg import LocalSummaries, local_summaries, deviance
-from .secure_agg import SecureAggregator, declassify_sum
+from .collective import SecureCollective, declassify_sum
 
 __all__ = ["FitResult", "RoundReport", "newton_step", "prox_newton_step",
            "centralized_fit", "secure_fit", "SecureFitDriver",
@@ -282,53 +281,20 @@ def _protected_tree(protect: str, hessian, gradient, dev):
 
 
 def _iteration_bytes(d: int, num_parts: int, protect: str,
-                     agg: SecureAggregator, include_count: bool = False,
+                     agg: SecureCollective, include_count: bool = False,
                      num_live_centers: int | None = None,
                      num_configs: int = 1, extra_scalars: int = 0) -> int:
-    """Per-iteration wire bytes from static shapes/dtypes alone.
+    """Per-iteration wire bytes (compat shim).
 
-    Every iteration moves the same messages (the summary shapes never
-    change), so telemetry needs no per-leaf walk inside the loop: shares
-    travel as w x R slices of the flat uint32 tile buffer (pallas) or
-    uint64 leaf tensors (reference); unprotected leaves go plain in f64.
-
-    ``include_count`` mirrors the coordinator wire protocol's extra
-    ``count`` leaf; ``num_live_centers`` switches from secure_fit's
-    all-w accounting to the coordinator's per-center slicing (each
-    online center receives one 1/w slice of the share buffer).
-    ``num_configs`` multiplies the whole message set for the selection
-    sweep's (lambda x fold) config axis — every config ships its own
-    summary tree per round — and ``extra_scalars`` accounts for that
-    path's additional held-out-metric leaves (val deviance / correct /
-    count) riding in each config's protected buffer.
+    The one static size model now lives on
+    :meth:`repro.core.collective.SecureCollective.round_bytes`; this
+    keeps the historical free-function signature working.
     """
-    extra = (2 if include_count else 1) + extra_scalars
-    n_protected = 0
-    if protect in ("gradient", "both"):
-        n_protected += d
-    if protect in ("hessian", "both"):
-        n_protected += d * d
-    if protect != "none":
-        n_protected += extra
-    scheme = agg.scheme
-    w, num_r = scheme.num_shares, scheme.field.num_residues
-    share_bytes = 0
-    if n_protected:
-        if agg.backend == "pallas":
-            rows = _rows_for(n_protected, ROW_ALIGN)
-            share_bytes = w * num_r * rows * LANES * 4  # uint32 wire format
-        else:
-            share_bytes = w * num_r * n_protected * 8  # uint64 leaves
-        if num_live_centers is not None:
-            share_bytes = (share_bytes // w) * num_live_centers
-    n_plain = 0
-    if protect in ("none", "hessian"):
-        n_plain += d
-    if protect in ("none", "gradient"):
-        n_plain += d * d
-    if protect == "none":
-        n_plain += extra
-    return num_configs * num_parts * (share_bytes + n_plain * 8)
+    return agg.round_bytes(
+        d, num_parts, protect, include_count=include_count,
+        num_live_centers=num_live_centers, num_configs=num_configs,
+        extra_scalars=extra_scalars,
+    )
 
 
 @functools.partial(
@@ -336,7 +302,7 @@ def _iteration_bytes(d: int, num_parts: int, protect: str,
                               "include_count", "summaries_backend")
 )
 def _fused_secure_iteration(beta, key, X, X32, y, counts, lam,
-                            agg: SecureAggregator, protect: str, l1: float,
+                            agg: SecureCollective, protect: str, l1: float,
                             interpret: bool,
                             points: tuple[int, ...] | None = None,
                             include_count: bool = False,
@@ -433,7 +399,7 @@ class SecureFitDriver:
         tol: float = 1e-10,
         max_iter: int = 50,
         protect: str = "gradient",
-        aggregator: SecureAggregator | None = None,
+        aggregator: SecureCollective | None = None,
         seed: int = 0,
         l1: float = 0.0,
         fused: bool | None = None,
@@ -446,7 +412,7 @@ class SecureFitDriver:
     ):
         if protect not in PROTECT_CHOICES:
             raise ValueError(f"protect must be one of {PROTECT_CHOICES}")
-        self.agg = aggregator or SecureAggregator()
+        self.agg = aggregator or SecureCollective()
         if fused is None:
             fused = self.agg.backend == "pallas"
         if fused and self.agg.backend != "pallas":
@@ -607,8 +573,8 @@ class SecureFitDriver:
             if self.online[j] and j not in in_cohort
         ]
         num_live = None if points is None else len(points)
-        nbytes = _iteration_bytes(
-            self.dim, len(parts), self.protect, self.agg,
+        nbytes = self.agg.round_bytes(
+            self.dim, len(parts), self.protect,
             num_live_centers=num_live,
         )
         if self.fused:
@@ -782,8 +748,8 @@ class SecureFitDriver:
             if self.online[j] and j not in in_cohort
         ]
         num_live = None if points is None else len(points)
-        nbytes = _iteration_bytes(
-            self.dim, len(parts), self.protect, self.agg,
+        nbytes = self.agg.round_bytes(
+            self.dim, len(parts), self.protect,
             num_live_centers=num_live,
         )
         if num_rounds is None:
@@ -910,7 +876,7 @@ def secure_fit(
     tol: float = 1e-10,
     max_iter: int = 50,
     protect: str = "gradient",
-    aggregator: SecureAggregator | None = None,
+    aggregator: SecureCollective | None = None,
     seed: int = 0,
     l1: float = 0.0,
     fused: bool | None = None,

@@ -60,12 +60,11 @@ from .logreg import local_summaries
 from .newton import (
     RoundReport,
     _fused_secure_iteration,
-    _iteration_bytes,
     newton_step,
     regularized_objective,
     should_stop_host,
 )
-from .secure_agg import SecureAggregator
+from .collective import SecureCollective
 
 __all__ = ["Institution", "ComputationCenter", "StudyCoordinator", "RoundReport"]
 
@@ -81,7 +80,7 @@ class Institution:
     latency: float = 0.0
     online: bool = True
 
-    def compute_and_protect(self, beta, protect: str, agg: SecureAggregator,
+    def compute_and_protect(self, beta, protect: str, agg: SecureCollective,
                             key):
         s = local_summaries(beta, self.X, self.y)
         tree = {"deviance": s.deviance, "count": s.count.astype(jnp.float64)}
@@ -122,7 +121,7 @@ class ComputationCenter:
         allocated, so a center's memory high-water mark is one slice
         regardless of cohort size.
         """
-        from .secure_agg import _fold_sum_streaming
+        from .collective import _fold_sum_streaming
 
         if len(self._stash) == 1:
             return self._stash[0]
@@ -142,21 +141,21 @@ class ComputationCenter:
 # every aggregator config a long-lived process ever constructs
 @functools.lru_cache(maxsize=64)
 def _round_bytes(d: int, cohort_size: int, protect: str,
-                 agg: SecureAggregator, num_live_centers: int) -> int:
+                 agg: SecureCollective, num_live_centers: int) -> int:
     """Per-round wire bytes from static shapes/dtypes alone.
 
     Every round moves the same messages for a given (cohort size, protect
     mode, scheme) — the summary shapes never change — so the telemetry
-    needs no per-leaf walk inside the round.  Delegates to the shared
-    ``newton._iteration_bytes`` size model with the coordinator wire
+    needs no per-leaf walk inside the round.  Delegates to the one
+    ``SecureCollective.round_bytes`` size model with the coordinator wire
     protocol's two deltas: the protected tree carries the extra ``count``
     leaf, and each online center receives a 1/w slice of the share
     buffer (uint32 flat tiles on pallas, uint64 leaf tensors on
     reference).  ``tests/test_protocol.py`` pins this formula against a
     per-leaf walk of the actual messages.
     """
-    return _iteration_bytes(
-        d, cohort_size, protect, agg, include_count=True,
+    return agg.round_bytes(
+        d, cohort_size, protect, include_count=True,
         num_live_centers=num_live_centers,
     )
 
@@ -169,7 +168,7 @@ class StudyCoordinator:
         institutions: Sequence[Institution],
         lam: float = 1.0,
         protect: str = "gradient",
-        aggregator: SecureAggregator | None = None,
+        aggregator: SecureCollective | None = None,
         num_centers: int | None = None,
         deadline: float | None = None,
         min_responders: int = 1,
@@ -183,7 +182,7 @@ class StudyCoordinator:
         self.institutions = list(institutions)
         self.lam = lam
         self.protect = protect
-        self.agg = aggregator or SecureAggregator()
+        self.agg = aggregator or SecureCollective()
         # fused rounds need the pallas flat-buffer wire format; the loop
         # stays the default because it is the bit-exact backend oracle
         if fused and self.agg.backend != "pallas":
@@ -306,7 +305,7 @@ class StudyCoordinator:
         center in place.  Replacing at an old point is still safe:
         every round shares fresh polynomials, so a replacement center
         learns nothing about earlier rounds' secrets, and
-        ``SecureAggregator._validated_points`` guards every reveal
+        ``SecureCollective._validated_points`` guards every reveal
         against duplicate/out-of-range points.  The next round's shares
         are simply cut against the new point set.
         """

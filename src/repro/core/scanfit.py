@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from .batched_summaries import PackedPartitions, batched_local_summaries
-from .secure_agg import SecureAggregator
+from .collective import SecureCollective
 
 __all__ = ["scan_rounds", "fit_scan_block"]
 
@@ -67,7 +67,7 @@ def scan_rounds(round_fn, skip_fn, settled_fn, carry0, num_rounds: int):
 )
 def fit_scan_block(beta, obj_prev, converged, iters, key, round_base,
                    X, X32, y, counts, lam,
-                   agg: SecureAggregator, protect: str, l1: float,
+                   agg: SecureCollective, protect: str, l1: float,
                    tol: float, interpret: bool,
                    points: tuple[int, ...] | None,
                    include_count: bool, summaries_backend: str,
@@ -105,14 +105,14 @@ def fit_scan_block(beta, obj_prev, converged, iters, key, round_base,
         regularized_objective,
         should_stop,
     )
-    from .secure_agg import declassify_sum
+    from .collective import declassify_sum
 
     packed = PackedPartitions(X, X32, y, counts)
     scale = agg.codec.scale
 
     def round_fn(carry):
         beta, obj_prev, converged, iters, slot = carry
-        kr = jax.random.fold_in(key, slot)
+        kr = agg.round_key(key, slot)
         sm = batched_local_summaries(
             beta, packed, backend=summaries_backend, interpret=interpret,
         )

@@ -1,97 +1,57 @@
-"""Secure aggregation primitives (paper Algorithm 2 + mult-by-public-const).
+"""Secure aggregation: compatibility surface over :mod:`repro.core.collective`.
+
+The full pack -> protect -> aggregate -> reveal -> unpack chain — the
+four named declassification boundaries, the flat-buffer wire, the
+in-SPMD psum paths and the byte telemetry — lives ONCE in
+:mod:`repro.core.collective` (:class:`SecureCollective`).  This module
+keeps the historical import surface working (``SecureAggregator`` is an
+alias of ``SecureCollective``) and houses the two share-algebra
+helpers that sit *outside* the chain:
+
+* :func:`secure_add` — Algorithm 2's share-wise addition, valid for any
+  share tensors or trees that used the same evaluation points;
+* :func:`secure_scale_by_public` — share-wise multiplication by a
+  public field constant.
 
 The homomorphism that makes the paper's protocol cheap: if A and B are
 secret-shared with the *same* evaluation points, then share-wise addition
-yields valid shares of A+B (Algorithm 2), and share-wise multiplication by a
-public constant c yields valid shares of c*A.  Aggregating S institutions'
-summaries therefore costs one field reduction over the S axis — no
-interaction between Computation Centers until the final (aggregate-only)
-reconstruction.
+yields valid shares of A+B (Algorithm 2), and share-wise multiplication
+by a public constant c yields valid shares of c*A.  Aggregating S
+institutions' summaries therefore costs one field reduction over the S
+axis — no interaction between Computation Centers until the final
+(aggregate-only) reconstruction.
 
-Two deployment styles:
-
-* **Host-side protocol** (paper-faithful simulation, `SecureAggregator`):
-  explicit share tensors (w, R, ...) flow institution -> centers -> reveal.
-* **In-SPMD** (`secure_psum`): inside a pjit/shard_map program, each pod
-  (institution) packs its local float tree into ONE flat (rows, 128) tile
-  buffer, pushes it through the fused encode+share kernel, and all-reduces
-  a single uint32 share buffer over the pod axis — Algorithm 2 executed
-  share-wise in the field.  Only the *threshold subset* of share slices is
-  ever evaluated or transmitted (t of w, at half the element width of the
-  old per-leaf uint64 tree), and only the global sum is revealed.  This is
-  the drop-in replacement for a plain gradient all-reduce used by
-  ``--secure-agg shamir`` training.  Two reveal modes:
-
-  - ``reveal="replicated"`` (default): the t-slice buffer is `psum`-ed
-    whole and every device runs the fused Lagrange+CRT reveal on its copy
-    (programming-model convenience, matches the old behavior).
-  - ``reveal="sharded"``: the share buffer is reduce-scattered over the
-    pod axis, so each device only ever holds — and the wire only ever
-    moves — a 1/D row-slice of the distributed residues; each device
-    reveals its slice and a final all-gather assembles the decoded float
-    aggregate.  Roughly halves the all-reduce payload again (the gathered
-    plaintext aggregate is far smaller than the share buffer).
-
-  The reference per-leaf path (``aggregator.backend == "reference"``)
-  remains available as the bit-exactness oracle; tests parametrize over
-  both like the protect/reveal backend switches.
-
-Backends and the flat-buffer hot path
--------------------------------------
-``SecureAggregator(backend="reference")`` walks the summary pytree leaf by
-leaf through the uint64 jnp oracle — one dispatch per leaf per field op.
-
-``backend="pallas"`` runs the fused pipeline: the float pytree is packed
-into ONE contiguous (rows, 128) tile buffer (`flatbuf.pack_pytree` — pad
-once, remember the layout), so each phase is a single kernel launch
-regardless of leaf count:
-
-* ``protect``  — fused fixed-point encode + Horner share evaluation
-  (`kernels.shamir_poly.shamir_encode_share_pallas`); the intermediate
-  uint64 encoded tensor never materializes.  Returns a `FlatProtected`.
-* ``aggregate`` — a streaming uint64 accumulator over the S submissions
-  (exact sum, one trailing mod): no (S, ...) stack is ever allocated.
-* ``reveal``   — fused Lagrange reconstruction + CRT Garner digit
-  (`kernels.shamir_reconstruct`), then unpack back to the original pytree.
-
-Share slices travel as uint32 (half the bytes of the reference uint64
-path).  `FlatProtected` is a registered pytree whose only leaf is the
-share buffer, so protocol code can slice/stack it with ``tree_map``
-exactly like a plain share pytree.  All three phases are jitted with the
-layout/scheme as static arguments.
+See the :mod:`repro.core.collective` module docstring for the backend
+story (reference per-leaf oracle vs the fused pallas flat-buffer path)
+and the one-chain audit contract.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
-from typing import Sequence
-
 import jax
-import jax.numpy as jnp
 
-from ..distributed.compat import axis_size as _compat_axis_size
-from ..obs import ledger as _ledger
-from ..obs.trace import traced as _traced
-from .field import (
-    FieldSpec,
-    FIELD_WIDE,
-    fadd,
-    fmul,
-    fsum,
-    random_elements_fast,
+from .collective import (  # noqa: F401  (compatibility re-exports)
+    FlatProtected,
+    OUT_MODES,
+    REVEAL_MODES,
+    SecureCollective,
+    ShardedAggregate,
+    _declassify_sum_impl,
+    _declassify_sum_jit,
+    _field_allreduce,
+    _fold_sum_streaming,
+    _fsum_batched,
+    _protect_flat,
+    _protect_flat_impl,
+    _protect_flat_jit,
+    _reveal_flat,
+    _reveal_flat_impl,
+    _reveal_flat_jit,
+    _secure_psum_per_leaf,
+    check_aggregation_headroom,
+    declassify_sum,
+    secure_psum,
 )
-from .fixed_point import FixedPointCodec
-from .flatbuf import (
-    FlatLayout,
-    LANES,
-    ROW_ALIGN,
-    pack_pytree,
-    pack_pytree_batched,
-    unpack_pytree,
-    unpack_pytree_tile,
-)
-from .shamir import ShamirScheme
+from .field import FieldSpec, fadd, fmul
 
 __all__ = [
     "secure_add",
@@ -106,73 +66,9 @@ __all__ = [
     "OUT_MODES",
 ]
 
-REVEAL_MODES = ("replicated", "sharded")
-OUT_MODES = ("tree", "tile")
-
-
-def check_aggregation_headroom(num_addends: int, field: FieldSpec) -> None:
-    """Guard the exact-uint64 share sum: ``S * max(p_r) < 2**64``.
-
-    Every aggregation path (streaming fold, batched reduction, in-SPMD
-    psum) accumulates reduced share elements (< p_r) in uint64 and applies
-    ONE trailing mod, which is exact iff the unreduced sum cannot wrap.
-    This is the single shared bound — ~2**33 institutions for the 31-bit
-    moduli — enforced here so no path carries its own (historically
-    inconsistent) claim.
-    """
-    if num_addends * max(field.moduli) >= 2**64:
-        raise ValueError(
-            f"cannot aggregate {num_addends} share tensors exactly: "
-            f"{num_addends} * max modulus {max(field.moduli)} >= 2**64 "
-            "would overflow the uint64 accumulator before the trailing mod"
-        )
-
-
-def _declassify_sum_impl(x, axis: int = 0):
-    return jnp.sum(x, axis=axis)
-
-
-# the pjit equation must be NAMED declassify_sum — that exact name is the
-# key the static taint verifier's declassification rules match on
-_declassify_sum_impl.__name__ = "declassify_sum"
-_declassify_sum_impl.__qualname__ = "declassify_sum"
-_declassify_sum_jit = functools.partial(
-    jax.jit, static_argnames=("axis",)
-)(_declassify_sum_impl)
-
-
-def declassify_sum(x, axis: int = 0):
-    """The sanctioned PLAINTEXT aggregation over the institution axis.
-
-    Semantically just ``jnp.sum(x, axis=axis)`` — but spelled as a named
-    jitted boundary so the static privacy-flow verifier
-    (:mod:`repro.analysis`) can certify it.  The paper's pragmatic
-    protect modes ("gradient" / "hessian" / "none") deliberately exchange
-    SOME summaries in the clear; the protocol contract is that only
-    their *cross-institution sums* ever leave the round.  Every driver
-    spells those sums through this function, which the taint verifier
-    treats as the one annotated SECRET -> PUBLIC declassification for
-    unprotected leaves (it still checks the reduction actually
-    aggregates >= 2 addends, so a non-reducing "sum" cannot launder an
-    individual institution's summary).  A plain ``jnp.sum`` on secret
-    data fails the gate — which is the point: intentional plaintext
-    aggregation must be visible and auditable.
-
-    The runtime privacy-audit ledger (:mod:`repro.obs.ledger`) counts
-    every *Python-level invocation* of this boundary: the hook lives in
-    this host wrapper, outside the jitted body, so a host-level call
-    records once per call (per round in the loop drivers) and a call
-    inside an enclosing ``jit`` records once per call site each time
-    the enclosing graph is traced.  Cached dispatches of an already
-    certified graph add no new declassification sites by construction —
-    ``python -m repro.obs audit`` reconciles the recorded counts against
-    a per-equation census of each driver spec's graph.  The hook records
-    static metadata only (shape/axis), never values, and adds no
-    equation to the graph.
-    """
-    _ledger.record_site("declassify_sum", what=f"axis{axis}_sum",
-                        shape=x.shape)
-    return _declassify_sum_jit(x, axis=axis)
+# the historical name; every constructor site keeps working and shares
+# one jit key-space with SecureCollective (same class, not a subclass)
+SecureAggregator = SecureCollective
 
 
 def secure_add(a, b, field: FieldSpec, residue_axis: int = 0):
@@ -186,620 +82,9 @@ def secure_add(a, b, field: FieldSpec, residue_axis: int = 0):
     )
 
 
-def secure_scale_by_public(shares, const_field: jnp.ndarray, field: FieldSpec,
+def secure_scale_by_public(shares, const_field, field: FieldSpec,
                            residue_axis: int = 0):
     """Multiply a secret (in shares) by a public field constant."""
     return jax.tree_util.tree_map(
         lambda s: fmul(s, const_field, field, residue_axis), shares
     )
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class FlatProtected:
-    """Protected flat-buffer representation: one uint32 share tensor.
-
-    ``buf`` is (w, R, rows, 128) fresh from ``protect`` (holder axis
-    leading), (R, rows, 128) after per-center slicing, or (k, R, rows, 128)
-    once >= t centers stack their aggregate slices for reveal.  ``layout``
-    (static aux data) remembers how to unpack the revealed buffer back into
-    the original pytree.  Registered as a pytree so protocol-level
-    ``tree_map`` slicing/stacking works transparently.
-    """
-
-    buf: jnp.ndarray
-    layout: FlatLayout
-
-    def tree_flatten(self):
-        return (self.buf,), self.layout
-
-    @classmethod
-    def tree_unflatten(cls, layout, children):
-        return cls(children[0], layout)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("field", "residue_axis")
-)
-def _fsum_batched(stacked, field: FieldSpec, residue_axis: int):
-    """Jitted S-way field reduction (cast + sum + mod fused by XLA)."""
-    return fsum(stacked, field, axis=0, residue_axis=residue_axis)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("field", "residue_axis")
-)
-def _fold_sum_streaming(submissions, field: FieldSpec, residue_axis: int):
-    """Share-wise sum of S submissions WITHOUT materializing an S-stack.
-
-    A running uint64 accumulator folds the submissions one by one with a
-    single mod at the end — exact iff ``S * max(p_r) < 2**64``, the shared
-    bound ``check_aggregation_headroom`` enforces on every caller.  XLA
-    fuses the unrolled chain into one elementwise loop over donation-sized
-    buffers, so peak memory is one accumulator — not the (S, ...) stack
-    the eager ``jnp.stack`` reduction allocated, which at 1e6+ params made
-    ``aggregate`` allocation-bound.
-    """
-    acc = jax.tree_util.tree_map(
-        lambda x: x.astype(jnp.uint64), submissions[0]
-    )
-    for nxt in submissions[1:]:
-        acc = jax.tree_util.tree_map(
-            lambda a, b: a + b.astype(jnp.uint64), acc, nxt
-        )
-
-    def _reduce(a, orig):
-        p = field._bcast(a, residue_axis)
-        return (a % p).astype(orig.dtype)
-
-    return jax.tree_util.tree_map(_reduce, acc, submissions[0])
-
-
-def _protect_flat_impl(key, buf, scheme: ShamirScheme, frac_bits: int,
-                       rows: int, points: tuple[int, ...] | None = None):
-    from ..kernels import ops
-
-    field = scheme.field
-    coeffs = random_elements_fast(
-        key, (scheme.threshold - 1, rows, LANES), field
-    ).astype(jnp.uint32)  # (R, t-1, rows, 128)
-    return ops.shamir_protect_flat(
-        buf, coeffs, scheme.num_shares, field.moduli, frac_bits,
-        interpret=scheme.interpret, points=points,
-    )  # (len(points) or w, R, rows, 128) uint32
-
-
-# keep the pjit names the taint verifier's declassification rules key on
-_protect_flat_impl.__name__ = "_protect_flat"
-_protect_flat_impl.__qualname__ = "_protect_flat"
-_protect_flat_jit = functools.partial(
-    jax.jit, static_argnames=("scheme", "frac_bits", "rows", "points")
-)(_protect_flat_impl)
-
-
-def _protect_flat(key, buf, scheme: ShamirScheme, frac_bits: int, rows: int,
-                  points: tuple[int, ...] | None = None):
-    """Host wrapper: ledger hook + the jitted protect boundary.
-
-    The audit ledger records per Python-level invocation (see
-    :func:`declassify_sum` for the counting semantics).
-    """
-    _ledger.record_site("_protect_flat", what="encode+share",
-                        shape=buf.shape, threshold=scheme.threshold)
-    return _protect_flat_jit(key, buf, scheme, frac_bits, rows,
-                             points=points)
-
-
-def _reveal_flat_impl(buf, scheme: ShamirScheme, frac_bits: int,
-                      points: tuple[int, ...]):
-    from ..kernels import ops
-
-    return ops.shamir_reveal_flat(
-        buf, points, scheme.field.moduli, frac_bits,
-        interpret=scheme.interpret,
-    )  # (rows, 128) float64
-
-
-_reveal_flat_impl.__name__ = "_reveal_flat"
-_reveal_flat_impl.__qualname__ = "_reveal_flat"
-_reveal_flat_jit = functools.partial(
-    jax.jit, static_argnames=("scheme", "frac_bits", "points")
-)(_reveal_flat_impl)
-
-
-def _reveal_flat(buf, scheme: ShamirScheme, frac_bits: int,
-                 points: tuple[int, ...]):
-    """Host wrapper: ledger hook + the jitted reveal boundary.
-
-    Every reveal — certified in-graph call sites AND any stray
-    host-level call — passes through here, so the runtime audit counts
-    it even when the jitted impl hits the compilation cache.
-    """
-    _ledger.record_site("_reveal_flat", what="lagrange_reveal",
-                        shape=buf.shape, threshold=scheme.threshold)
-    return _reveal_flat_jit(buf, scheme, frac_bits, points)
-
-
-@dataclasses.dataclass(frozen=True)
-class SecureAggregator:
-    """End-to-end protect -> aggregate -> reveal pipeline for float pytrees.
-
-    ``backend=None`` inherits the scheme's backend; passing "pallas" or
-    "reference" overrides the scheme to match (convenience so callers can
-    write ``SecureAggregator(backend="pallas")``).
-
-    ``overflow_check=True`` arms the debug-mode fixed-point overflow
-    assert on every protect path: a value past the capacity bound raises
-    ``OverflowError`` (eagerly outside jit, at the next sync inside)
-    instead of silently saturating into a plausible-but-wrong reveal —
-    the hard-failure form of the ``headroom_ok`` predicate.  Paths that
-    know the addend count (``protect_batched`` over S institutions,
-    ``secure_psum`` over D devices) tighten the bound to
-    ``capacity / S`` so an aggregate that would overflow is caught at
-    protect time, not revealed wrong.
-    """
-
-    scheme: ShamirScheme = ShamirScheme()
-    codec: FixedPointCodec = FixedPointCodec()
-    backend: str | None = None
-    overflow_check: bool = False
-
-    def __post_init__(self):
-        if self.backend is None:
-            object.__setattr__(self, "backend", self.scheme.backend)
-        elif self.backend != self.scheme.backend:
-            object.__setattr__(
-                self, "scheme",
-                dataclasses.replace(self.scheme, backend=self.backend),
-            )
-        if self.scheme.field is not self.codec.field and (
-            self.scheme.field.moduli != self.codec.field.moduli
-        ):
-            raise ValueError("scheme and codec must agree on the field")
-
-    # institution side --------------------------------------------------------
-    @_traced("protect")
-    def protect(self, key: jax.Array, tree):
-        """Encode floats to the field and split into shares.
-
-        Reference backend: per-leaf share pytree of (w, R, ...) uint64.
-        Pallas backend: a single ``FlatProtected`` share buffer.
-        """
-        if self.backend == "pallas":
-            buf, layout = pack_pytree(tree)
-            if self.overflow_check:
-                self.codec.check_headroom(buf, what="protect")
-            shares = _protect_flat(
-                key, buf, self.scheme, self.codec.frac_bits, layout.rows
-            )
-            return FlatProtected(shares, layout)
-        encoded = jax.tree_util.tree_map(
-            functools.partial(self.codec.encode, check=self.overflow_check),
-            tree,
-        )
-        return self.scheme.share_pytree(key, encoded)
-
-    @_traced("protect")
-    def protect_batched(self, key: jax.Array, tree):
-        """Protect S institutions' summaries in ONE kernel launch.
-
-        ``tree`` leaves carry a leading S (institution) axis; the S flat
-        slices are packed side by side and pushed through a single
-        encode+share launch.  Returns a ``FlatProtected`` whose buffer is
-        (w, R, S, rows, 128) — feed it to ``aggregate_batched`` to reduce
-        the S axis (the layout describes one slice, i.e. the aggregate).
-        Pallas backend only: the batched layout IS the flat wire format.
-        """
-        if self.backend != "pallas":
-            raise ValueError("protect_batched requires the pallas backend")
-        buf, layout = pack_pytree_batched(tree)
-        if self.overflow_check:
-            # the S slices will be summed: bound each by capacity / S so
-            # the AGGREGATE cannot overflow (the headroom_ok contract)
-            self.codec.check_headroom(
-                buf, num_addends=buf.shape[0], what="protect_batched"
-            )
-        s_dim, rows = buf.shape[0], layout.rows
-        shares = _protect_flat(
-            key, buf.reshape(s_dim * rows, LANES), self.scheme,
-            self.codec.frac_bits, s_dim * rows,
-        )  # (w, R, S*rows, 128)
-        w, num_r = shares.shape[0], shares.shape[1]
-        return FlatProtected(
-            shares.reshape(w, num_r, s_dim, rows, LANES), layout
-        )
-
-    # computation-center side -------------------------------------------------
-    @_traced("aggregate")
-    def aggregate(self, protected: Sequence):
-        """Share-wise sum over institutions (still protected).
-
-        Streams a running uint64 accumulator over the S submissions (one
-        fused elementwise chain, single mod) instead of stacking them: at
-        1e6+ params the old eager ``jnp.stack`` made this phase
-        allocation-bound on the (S, w, R, ...) stack.
-        """
-        if not protected:
-            raise ValueError("nothing to aggregate")
-        if len(protected) == 1:
-            return protected[0]
-        field = self.scheme.field
-        check_aggregation_headroom(len(protected), field)
-        # leaves are (w, R, ...) protect outputs: residue axis 1 (same
-        # contract as secure_add)
-        return _fold_sum_streaming(tuple(protected), field, residue_axis=1)
-
-    @_traced("aggregate")
-    def aggregate_batched(self, protected: FlatProtected) -> FlatProtected:
-        """Reduce the institution axis of a ``protect_batched`` output.
-
-        One exact uint64 reduction over axis 2 of the (w, R, S, rows, 128)
-        share buffer — Algorithm 2 for all S submissions in a single
-        dispatch, with no per-submission stacking step.
-        """
-        check_aggregation_headroom(protected.buf.shape[2], self.scheme.field)
-        buf = fsum(protected.buf, self.scheme.field, axis=2, residue_axis=1)
-        return FlatProtected(buf, protected.layout)
-
-    def _validated_points(self, points) -> tuple[int, ...]:
-        """Normalize + sanity-check reveal points (1-based, distinct).
-
-        ``None`` defaults to the first t points — the SAME t-subset
-        default every reveal path uses (reconstruction from any t shares
-        is exact, so a t-subset reveal is bit-identical to the all-w one
-        and does strictly less work).  Below-threshold subsets are
-        rejected here, before any reduction over a short share axis.
-        """
-        w = self.scheme.num_shares
-        if points is None:
-            points = tuple(range(1, self.scheme.threshold + 1))
-        points = tuple(int(p) for p in points)
-        if any(not (1 <= p <= w) for p in points):
-            raise ValueError(f"points must be in 1..{w}, got {points}")
-        if len(set(points)) != len(points):
-            raise ValueError(f"points must be distinct, got {points}")
-        if len(points) < self.scheme.threshold:
-            raise ValueError(
-                f"need >= t={self.scheme.threshold} shares, got "
-                f"{len(points)} (information-theoretically irrecoverable "
-                "below threshold)"
-            )
-        return points
-
-    @_traced("secure_round")
-    def secure_round_batched(self, key: jax.Array, tree,
-                             points: Sequence[int] | None = None,
-                             dtype=jnp.float64):
-        """One whole Algorithm-1+2 round over S-leading summaries.
-
-        protect_batched (ONE encode+share launch) -> aggregate_batched
-        (single exact uint64 reduction over the institution axis) ->
-        reveal of the *global* aggregate from the ``points`` centers'
-        slices.  ``points`` are the 1-based evaluation points of the
-        centers participating in the reveal (default: the first t); a
-        short list raises the below-threshold error from ``reveal``, so a
-        caller that lost too many centers fails loudly instead of
-        reducing over a short share axis.  Fully traceable — this is the
-        round helper both the fused ``secure_fit`` iteration and the
-        fused ``StudyCoordinator.step`` run inside one jitted graph.
-        """
-        points = self._validated_points(points)
-        prot = self.protect_batched(key, tree)
-        aggd = self.aggregate_batched(prot)
-        sel = jnp.asarray([p - 1 for p in points])
-        return self.reveal(
-            FlatProtected(aggd.buf[sel], aggd.layout), points=points,
-            dtype=dtype,
-        )
-
-    @_traced("secure_round")
-    def secure_round_multiconfig(self, key: jax.Array, tree,
-                                 points: Sequence[int] | None = None,
-                                 dtype=jnp.float64):
-        """One secure round over a (C, S, ...)-leading summary tree.
-
-        The selection sweep's wire shape: every leaf carries a leading
-        (config, institution) pair of axes — C = (lambda x fold) path
-        points advancing together, S institutions each submitting one
-        summary slice per config.  The whole round is still three
-        launches total, independent of C:
-
-        * ONE encode+share launch over the (C * S) flat slices
-          (``protect_batched`` on the collapsed leading axis),
-        * ONE exact uint64 reduction over the institution axis — the
-          share buffer reshapes to (w, R, C, S, rows, 128) and Algorithm
-          2 runs per config along axis 3,
-        * ONE Lagrange+CRT reveal over the (C * rows, 128) stack of
-          per-config aggregates, unpacked back to (C, ...)-leading
-          leaves.
-
-        Per-institution validation scores therefore never exist in the
-        clear anywhere: held-out metrics enter as shares and only their
-        cross-institution sums are reconstructed, per config.  Fully
-        traceable; this runs inside the selection scan's jitted graph.
-        """
-        points = self._validated_points(points)
-        leaves, treedef = jax.tree_util.tree_flatten(tree)
-        if not leaves:
-            raise ValueError("cannot run a round on an empty pytree")
-        c_dim, s_dim = leaves[0].shape[0], leaves[0].shape[1]
-        if any(l.shape[:2] != (c_dim, s_dim) for l in leaves):
-            raise ValueError(
-                "all leaves need the same leading (config, institution) axes"
-            )
-        flat_tree = jax.tree_util.tree_unflatten(
-            treedef,
-            [l.reshape((c_dim * s_dim,) + l.shape[2:]) for l in leaves],
-        )
-        prot = self.protect_batched(key, flat_tree)
-        w, num_r, _, rows, lanes = prot.buf.shape
-        by_config = prot.buf.reshape(w, num_r, c_dim, s_dim, rows, lanes)
-        # Algorithm 2 per config: exact uint64 reduction over institutions
-        check_aggregation_headroom(s_dim, self.scheme.field)
-        aggd = fsum(by_config, self.scheme.field, axis=3, residue_axis=1)
-        sel = jnp.asarray([p - 1 for p in points])
-        stacked = aggd[sel].reshape(len(points), num_r, c_dim * rows, lanes)
-        flat = _reveal_flat(
-            stacked, self.scheme, self.codec.frac_bits, points
-        )  # (C * rows, 128) float64
-        from .flatbuf import unpack_pytree_batched
-
-        return unpack_pytree_batched(
-            flat.reshape(c_dim, rows, lanes), prot.layout, dtype=dtype
-        )
-
-    @_traced("reveal")
-    def reveal(self, protected, points=None, dtype=jnp.float64):
-        """Joint reconstruction of the (aggregate) secret -> floats.
-
-        In deployment this is the only step that requires >= t centers to
-        cooperate, and it is only ever invoked on *global* aggregates.
-
-        ``points=None`` assumes the share slices are in holder order
-        (1..k, as ``protect`` emits them) and reconstructs from the first
-        t — the unified ``_validated_points`` default on BOTH backends.
-        Reconstruction from any t-subset is exact field arithmetic, so the
-        result is bit-identical to an all-k reveal at a fraction of the
-        Lagrange work.  Pass explicit ``points`` when the slices are a
-        non-contiguous center subset (then they must match the slice
-        count).
-        """
-        t = self.scheme.threshold
-        if isinstance(protected, FlatProtected):
-            k = protected.buf.shape[0]
-            if k < t:
-                raise ValueError(
-                    f"need >= t={t} shares, got {k} "
-                    "(information-theoretically irrecoverable below "
-                    "threshold)"
-                )
-            if points is None:
-                buf = protected.buf[:t] if k > t else protected.buf
-                pts = self._validated_points(None)
-            else:
-                buf = protected.buf
-                pts = self._validated_points(points)
-                if len(pts) != k:
-                    raise ValueError("points must match share count")
-            flat = _reveal_flat(
-                buf, self.scheme, self.codec.frac_bits, pts
-            )
-            return unpack_pytree(flat, protected.layout, dtype=dtype)
-        if points is None:
-            # same t-subset default as the flat path: slice each leaf's
-            # holder axis down to the first t shares before reconstructing
-            leaves = jax.tree_util.tree_leaves(protected)
-            k = leaves[0].shape[0] if leaves else 0
-            if k < t:
-                raise ValueError(
-                    f"need >= t={t} shares, got {k} "
-                    "(information-theoretically irrecoverable below "
-                    "threshold)"
-                )
-            protected = jax.tree_util.tree_map(
-                lambda s: s[:t], protected
-            )
-            points = self._validated_points(None)
-        recon = self.scheme.reconstruct_pytree(protected, list(points))
-        return jax.tree_util.tree_map(
-            lambda v: self.codec.decode(v, dtype=dtype), recon
-        )
-
-    def headroom_ok(self, max_abs: float, num_institutions: int) -> bool:
-        """True if S summaries of magnitude <= max_abs aggregate exactly."""
-        return max_abs * num_institutions < self.codec.capacity()
-
-
-def _field_allreduce(shares, axis_name: str, field: FieldSpec,
-                     residue_axis: int = 1, scatter_axis: int | None = None):
-    """Exact share-wise field sum over a mesh axis (Algorithm 2 on the wire).
-
-    The accumulation widens to uint64 so XLA's collective (which has no
-    per-hop modular reduction) stays exact — the shared
-    ``check_aggregation_headroom`` bound ``S * max(p_r) < 2**64`` — and a
-    single trailing mod returns the reduced wire dtype.  A deployment
-    fabric doing per-hop modular adds would move the reduced uint32
-    elements instead; the payload accounting counts those (see
-    ``benchmarks/secure_psum.py``).
-
-    ``scatter_axis=None`` all-reduces (every device gets the full summed
-    buffer); an integer reduce-scatters that axis so each device keeps
-    only its 1/D tile of the distributed residues.
-    """
-    summed = jax.lax.psum(shares.astype(jnp.uint64), axis_name) \
-        if scatter_axis is None else jax.lax.psum_scatter(
-            shares.astype(jnp.uint64), axis_name,
-            scatter_dimension=scatter_axis, tiled=True,
-        )
-    return (summed % field._bcast(summed, residue_axis)).astype(shares.dtype)
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class ShardedAggregate:
-    """A revealed aggregate that STAYS sharded over the reduce axis.
-
-    ``secure_psum(reveal="sharded", out="tile")`` hands every device its
-    decoded ``(rows / D, 128)`` plaintext tile of the flat aggregate
-    buffer instead of all-gathering + unpacking.  Downstream code that
-    consumes the aggregate shard-wise (a distributed solve, a sharded
-    optimizer update) skips the gather entirely; anything that needs the
-    whole tree calls :meth:`gather` — which is exactly what
-    ``out="tree"`` would have done, so the two spellings are bit-equal.
-
-    Registered as a pytree with the tile as its only leaf (layout and
-    tile count are static aux data), so it crosses ``shard_map`` /
-    ``jit`` boundaries like a plain array.
-    """
-
-    tile: jnp.ndarray
-    layout: FlatLayout
-    num_tiles: int
-
-    def gather(self, axis_name: str, dtype=jnp.float32):
-        """All-gather the plaintext tiles and unpack the full pytree."""
-        flat = jax.lax.all_gather(self.tile, axis_name, axis=0, tiled=True)
-        return unpack_pytree(flat, self.layout, dtype=dtype)
-
-    def local_fragments(self, tile_index: int, dtype=None):
-        """Leaf fragments in THIS tile (static ``tile_index`` required).
-
-        See :func:`repro.core.flatbuf.unpack_pytree_tile` for the
-        ``{leaf: (start, stop, fragment)}`` contract.
-        """
-        return unpack_pytree_tile(
-            self.tile, self.layout, tile_index, self.num_tiles, dtype=dtype
-        )
-
-    def tree_flatten(self):
-        return (self.tile,), (self.layout, self.num_tiles)
-
-    @classmethod
-    def tree_unflatten(cls, aux, leaves):
-        return cls(leaves[0], *aux)
-
-
-def _secure_psum_per_leaf(tree, axis_name: str, key: jax.Array,
-                          agg: SecureAggregator, points: tuple[int, ...],
-                          dtype):
-    """The original per-leaf uint64 wire: the bit-exactness oracle.
-
-    Protects leaf by leaf through the reference pipeline and all-reduces
-    every holder's full (w, R, ...) uint64 share tree — w * R * 8 bytes
-    per parameter on the wire, reconstruction on every device.  Kept (and
-    parametrized in tests) as the oracle the flat-buffer wire is measured
-    against; new code wants the flat path.
-    """
-    protected = agg.protect(key, tree)
-    aggregated = jax.tree_util.tree_map(
-        lambda s: _field_allreduce(s, axis_name, agg.scheme.field), protected
-    )
-    sel = jnp.asarray([p - 1 for p in points])
-    subset = jax.tree_util.tree_map(lambda s: s[sel], aggregated)
-    return agg.reveal(subset, points=points, dtype=dtype)
-
-
-@_traced("secure_psum")
-def secure_psum(tree, axis_name: str, key: jax.Array,
-                aggregator: SecureAggregator | None = None,
-                dtype=jnp.float32, reveal: str = "replicated",
-                points: Sequence[int] | None = None,
-                out: str = "tree"):
-    """Secret-shared all-reduce over a mesh axis (SPMD Algorithm 1, 11-13).
-
-    Per device: pack the local float tree into ONE flat (rows, 128) tile
-    buffer, push it through the fused fixed-point-encode + Horner-share
-    kernel (fresh randomness per device via axis-index key folding), and
-    reduce the uint32 share buffer over ``axis_name`` — which IS Algorithm
-    2 executed by the virtual Computation Centers — then reveal + decode
-    only the global sum via the fused Lagrange+CRT kernel.  Only the
-    ``points`` subset of share slices (default: the first t, the unified
-    reveal default) is ever evaluated or transmitted, so the wire carries
-    a (t, R, rows, 128) uint32 buffer — t/w of the slices at half the
-    element width of the per-leaf uint64 tree.
-
-    ``reveal`` selects where the residues live between reduction and
-    decode:
-
-    * ``"replicated"`` — one `psum`; every device holds the full summed
-      share buffer and reconstructs its own copy of the aggregate
-      (programming-model convenience, the pre-sharded behavior).
-    * ``"sharded"`` — `psum_scatter` over the rows axis: each device only
-      ever holds a 1/D row-tile of the aggregated residues, reveals just
-      that tile, and a final all-gather assembles the *decoded* float
-      aggregate — the share buffer crosses the wire once instead of
-      twice, cutting the all-reduce payload roughly in half (the gathered
-      plaintext is ``dtype``-sized, far smaller than the share buffer).
-
-    ``out`` selects the return shape of the sharded reveal:
-
-    * ``"tree"`` (default) — all-gather the decoded tiles and unpack the
-      full float pytree on every device (the historical behavior).
-    * ``"tile"`` — skip the gather: return a :class:`ShardedAggregate`
-      whose ``tile`` leaf is this device's decoded plaintext row-tile.
-      ``.gather(axis_name)`` reproduces ``out="tree"`` bit-exactly;
-      shard-wise consumers never pay for the assembled tree.
-
-    Passing ``aggregator=SecureAggregator(backend="reference")`` selects
-    the original per-leaf uint64 wire (replicated reveal only) — the
-    bit-exactness oracle.  Cryptographically, both modes only ever
-    *combine* shares (never reveal an individual contribution) before the
-    aggregate reconstruction, matching the paper's trust model where
-    centers jointly reveal aggregates.
-    """
-    agg = aggregator or SecureAggregator(backend="pallas")
-    if reveal not in REVEAL_MODES:
-        raise ValueError(f"reveal must be one of {REVEAL_MODES}")
-    if out not in OUT_MODES:
-        raise ValueError(f"out must be one of {OUT_MODES}")
-    if out == "tile" and reveal != "sharded":
-        raise ValueError(
-            "out='tile' only makes sense with reveal='sharded' — the "
-            "replicated reveal already holds the full aggregate everywhere"
-        )
-    pts = agg._validated_points(points)
-    num_devices = _compat_axis_size(axis_name)
-    check_aggregation_headroom(num_devices, agg.scheme.field)
-    if agg.overflow_check:
-        # every device's contribution is bounded by capacity / D so the
-        # D-way field sum cannot overflow (headroom_ok, hard-failure form)
-        jax.tree_util.tree_map(
-            lambda leaf: agg.codec.check_headroom(
-                leaf, num_addends=num_devices, what="secure_psum"
-            ),
-            tree,
-        )
-    idx = jax.lax.axis_index(axis_name)
-    key = jax.random.fold_in(key, idx)
-    if agg.backend != "pallas":
-        if reveal != "replicated":
-            raise ValueError(
-                "reveal='sharded' needs the flat-buffer wire (pallas "
-                "backend); the per-leaf reference oracle is replicated-only"
-            )
-        return _secure_psum_per_leaf(tree, axis_name, key, agg, pts, dtype)
-
-    # sharded reveal scatters the rows axis: align rows to lcm(8, D) so
-    # every device's tile keeps the (8, 128) sublane layout (the zero
-    # tail packs to zero shares — benign through reduce and reveal)
-    row_align = ROW_ALIGN if reveal == "replicated" else math.lcm(
-        ROW_ALIGN, num_devices
-    )
-    buf, layout = pack_pytree(tree, row_align=row_align)
-    shares = _protect_flat(
-        key, buf, agg.scheme, agg.codec.frac_bits, layout.rows, points=pts
-    )  # (t', R, rows, 128) uint32 — only the reveal subset exists
-    if reveal == "replicated":
-        summed = _field_allreduce(shares, axis_name, agg.scheme.field)
-        flat = _reveal_flat(summed, agg.scheme, agg.codec.frac_bits, pts)
-        return unpack_pytree(flat, layout, dtype=dtype)
-    tile = _field_allreduce(
-        shares, axis_name, agg.scheme.field, scatter_axis=2
-    )  # (t', R, rows / D, 128): this device's slice of the residues
-    flat_tile = _reveal_flat(
-        tile, agg.scheme, agg.codec.frac_bits, pts
-    ).astype(dtype)  # decode locally, gather plaintext (dtype-sized)
-    if out == "tile":
-        return ShardedAggregate(flat_tile, layout, num_devices)
-    flat = jax.lax.all_gather(flat_tile, axis_name, axis=0, tiled=True)
-    return unpack_pytree(flat, layout, dtype=dtype)

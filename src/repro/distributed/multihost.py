@@ -6,10 +6,13 @@ the real layout the paper describes: institutions laid along the
 ``POD_AXIS`` of a device mesh (one party per pod, ``secure_psum`` as the
 wire) and — new here — the Computation Centers laid along a second
 ``SHARE_AXIS``, so each center-device only ever *holds* its own share
-slice and the reveal itself is distributed:
+slice and the reveal itself is distributed.  Both wires — and the
+``_distributed_reveal`` boundary itself — live on
+:class:`repro.core.collective.SecureCollective` (``psum`` /
+``psum_2d``); this module is the mesh/launcher layer around them:
 
 * **1D (pod) mesh** — every device runs the full t-slice wire of
-  :func:`repro.core.secure_agg.secure_psum`; the scan-resident round
+  :func:`repro.core.collective.secure_psum`; the scan-resident round
   chain (:func:`scan_secure_rounds`) keeps a whole block of rounds
   in-graph with the next round's sharing randomness generated while the
   current round's collective is in flight (double buffering: on a
@@ -35,14 +38,12 @@ initializes); real multi-process runs call
 """
 from __future__ import annotations
 
-import functools
 import math
 import os
 
 import jax
 import jax.numpy as jnp
 
-from ..obs import ledger as _ledger
 from ..obs import trace as _trace
 from .compat import axis_size, make_mesh, shard_map
 from .sharding import POD_AXIS, SHARE_AXIS
@@ -101,62 +102,6 @@ def pod_share_mesh(num_pods: int, num_centers: int):
     return make_mesh((num_pods, num_centers), (POD_AXIS, SHARE_AXIS))
 
 
-def _distributed_reveal_impl(agg_slice, scheme, codec, points, share_axis,
-                             dtype):
-    """Lagrange reconstruction as a SHARE_AXIS collective.
-
-    ``agg_slice`` is this center's aggregated share slice (R, rows, 128)
-    uint32.  Each center multiplies by its own public weight
-    ``L_j(0) mod p_r`` (field mul, uint64), then ONE psum over the share
-    axis + trailing mod yields the aggregate residues — exact because
-    the k partial products are each < p_r < 2**31 and k << 2**33
-    (the shared aggregation-headroom bound).  CRT decode is local.
-
-    Jitted under its own name on purpose: the static privacy-flow gate
-    (:mod:`repro.analysis`) recognizes the ``_distributed_reveal`` pjit
-    as the 2D mesh's ONE sanctioned declassification and checks its
-    operand is the pod-aggregated share slice revealed over a
-    threshold-satisfying share axis.
-    """
-    from ..core.field import crt_combine_signed
-    from ..core.shamir import lagrange_coeffs_at_zero
-
-    field = scheme.field
-    lam = lagrange_coeffs_at_zero(points, field)  # (R, k) uint64
-    j = jax.lax.axis_index(share_axis)
-    w = jnp.take(lam, j, axis=1)  # (R,) this center's weight
-    partial = (agg_slice.astype(jnp.uint64) * w[:, None, None]) \
-        % field._bcast(agg_slice, 0)
-    summed = jax.lax.psum(partial, share_axis) % field._bcast(partial, 0)
-    signed = crt_combine_signed(summed, field)
-    return (signed.astype(jnp.float64) / codec.scale).astype(dtype)
-
-
-# the pjit equation must keep the exact name the static gate's
-# declassification rules match on
-_distributed_reveal_impl.__name__ = "_distributed_reveal"
-_distributed_reveal_impl.__qualname__ = "_distributed_reveal"
-_distributed_reveal_jit = functools.partial(
-    jax.jit, static_argnames=("scheme", "codec", "points", "share_axis",
-                              "dtype")
-)(_distributed_reveal_impl)
-
-
-def _distributed_reveal(agg_slice, scheme, codec, points, share_axis,
-                        dtype):
-    """Host wrapper: privacy-ledger hook + the jitted collective reveal.
-
-    The runtime audit counts per Python-level invocation — once per
-    trace of the enclosing ``shard_map`` graph (see
-    :func:`repro.core.secure_agg.declassify_sum` for semantics).
-    """
-    _ledger.record_site("_distributed_reveal", what="share_axis_reveal",
-                        shape=agg_slice.shape,
-                        threshold=scheme.threshold)
-    return _distributed_reveal_jit(agg_slice, scheme, codec, points,
-                                   share_axis, dtype)
-
-
 def secure_psum_2d(tree, key, aggregator=None, dtype=jnp.float32,
                    pod_axis: str = POD_AXIS, share_axis: str = SHARE_AXIS,
                    points=None):
@@ -170,46 +115,18 @@ def secure_psum_2d(tree, key, aggregator=None, dtype=jnp.float32,
 
     1. uint64 psum over ``pod_axis``  — Algorithm 2 at center j;
     2. weighted uint64 psum over ``share_axis`` — the distributed
-       Lagrange reveal (:func:`_distributed_reveal`).
+       Lagrange reveal (the ``_distributed_reveal`` boundary).
 
     Bit-equal to the 1D ``secure_psum`` wire: both reveal the exact
-    field encoding of the global sum.
+    field encoding of the global sum.  The chain itself is
+    :meth:`repro.core.collective.SecureCollective.psum_2d`; this is the
+    historical entry point.
     """
-    from ..core.secure_agg import (
-        SecureAggregator,
-        _field_allreduce,
-        _protect_flat,
-        check_aggregation_headroom,
-    )
-    from ..core.flatbuf import pack_pytree, unpack_pytree
+    from ..core.collective import SecureCollective
 
-    agg = aggregator or SecureAggregator(backend="pallas")
-    if agg.backend != "pallas":
-        raise ValueError("secure_psum_2d needs the flat-buffer wire "
-                         "(pallas backend)")
-    pts = agg._validated_points(points)
-    k = axis_size(share_axis)
-    if k != len(pts):
-        raise ValueError(
-            f"share axis has {k} devices but the reveal subset is "
-            f"{len(pts)} points — one center per revealed slice"
-        )
-    num_pods = axis_size(pod_axis)
-    check_aggregation_headroom(num_pods, agg.scheme.field)
-    key = jax.random.fold_in(key, jax.lax.axis_index(pod_axis))
-    buf, layout = pack_pytree(tree)
-    shares = _protect_flat(
-        key, buf, agg.scheme, agg.codec.frac_bits, layout.rows, points=pts
-    )  # (k, R, rows, 128); same on every share column of this pod
-    j = jax.lax.axis_index(share_axis)
-    mine = jnp.take(shares, j, axis=0)  # (R, rows, 128): center j's slice
-    agg_slice = _field_allreduce(
-        mine, pod_axis, agg.scheme.field, residue_axis=0
-    )
-    flat = _distributed_reveal(
-        agg_slice, agg.scheme, agg.codec, pts, share_axis, jnp.float64
-    )
-    return unpack_pytree(flat, layout, dtype=dtype)
+    agg = aggregator or SecureCollective(backend="pallas")
+    return agg.psum_2d(tree, key, dtype=dtype, pod_axis=pod_axis,
+                       share_axis=share_axis, points=points)
 
 
 def scan_secure_rounds(tree, key, num_rounds: int, aggregator=None,
@@ -234,18 +151,16 @@ def scan_secure_rounds(tree, key, num_rounds: int, aggregator=None,
     Rounds use ``fold_in(key, slot)`` so the chain is bit-reproducible
     regardless of how many rounds one scan covers.
     """
-    from ..core.field import random_elements_fast
-    from ..core.flatbuf import LANES, pack_pytree, unpack_pytree
-    from ..core.secure_agg import (
+    from ..core.collective import (
         REVEAL_MODES,
-        SecureAggregator,
-        _field_allreduce,
-        _reveal_flat,
+        SecureCollective,
         check_aggregation_headroom,
     )
+    from ..core.field import random_elements_fast
+    from ..core.flatbuf import LANES, pack_pytree, unpack_pytree
     from ..kernels import ops
 
-    agg = aggregator or SecureAggregator(backend="pallas")
+    agg = aggregator or SecureCollective(backend="pallas")
     if agg.backend != "pallas":
         raise ValueError("scan_secure_rounds needs the flat-buffer wire")
     if reveal not in REVEAL_MODES:
@@ -254,7 +169,7 @@ def scan_secure_rounds(tree, key, num_rounds: int, aggregator=None,
     scheme, field = agg.scheme, agg.scheme.field
     num_devices = axis_size(axis_name)
     check_aggregation_headroom(num_devices, field)
-    key = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    key = agg.round_key(key, jax.lax.axis_index(axis_name))
 
     row_align = 8 if reveal == "replicated" else math.lcm(8, num_devices)
     buf0, layout = pack_pytree(tree, row_align=row_align)
@@ -262,7 +177,7 @@ def scan_secure_rounds(tree, key, num_rounds: int, aggregator=None,
 
     def draw_coeffs(slot):
         return random_elements_fast(
-            jax.random.fold_in(key, slot),
+            agg.round_key(key, slot),
             (scheme.threshold - 1, layout.rows, LANES), field,
         ).astype(jnp.uint32)
 
@@ -273,15 +188,11 @@ def scan_secure_rounds(tree, key, num_rounds: int, aggregator=None,
             agg.codec.frac_bits, interpret=scheme.interpret, points=pts,
         )
         if reveal == "replicated":
-            summed = _field_allreduce(shares, axis_name, field)
-            flat = _reveal_flat(summed, scheme, agg.codec.frac_bits, pts)
+            summed = agg.allreduce(shares, axis_name)
+            flat = agg.reveal_wire(summed, pts)
         else:
-            tile = _field_allreduce(
-                shares, axis_name, field, scatter_axis=2
-            )
-            flat_tile = _reveal_flat(
-                tile, scheme, agg.codec.frac_bits, pts
-            )
+            tile = agg.allreduce(shares, axis_name, scatter_axis=2)
+            flat_tile = agg.reveal_wire(tile, pts)
             flat = jax.lax.all_gather(
                 flat_tile, axis_name, axis=0, tiled=True
             )

@@ -183,7 +183,7 @@ def extra_reveal_fixture(spec) -> SpecAudit:
         import jax.numpy as jnp
 
         from ..analysis.drivers import _aggregator
-        from ..core.secure_agg import _reveal_flat
+        from ..core.collective import _reveal_flat
 
         agg = _aggregator()
         prot = agg.protect(jax.random.PRNGKey(1),

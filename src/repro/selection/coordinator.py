@@ -29,7 +29,7 @@ from typing import Sequence
 import numpy as np
 
 from ..core.protocol import Institution, StudyCoordinator
-from ..core.secure_agg import SecureAggregator
+from ..core.collective import SecureCollective
 from ..obs.trace import traced as _traced
 from .folds import assign_folds
 from .path import PathDriver, PathSettings
@@ -48,7 +48,7 @@ class SelectionCoordinator:
         num_folds: int = 5,
         l1: float = 0.0,
         protect: str = "gradient",
-        aggregator: SecureAggregator | None = None,
+        aggregator: SecureCollective | None = None,
         num_centers: int | None = None,
         deadline: float | None = None,
         min_responders: int = 1,
@@ -62,7 +62,7 @@ class SelectionCoordinator:
         warm_start: bool = True,
         refit: bool = True,
     ):
-        agg = aggregator or SecureAggregator(backend="pallas")
+        agg = aggregator or SecureCollective(backend="pallas")
         self.settings = PathSettings(
             lambdas=tuple(sorted((float(l) for l in lambdas),
                                  reverse=True)),

@@ -8,7 +8,7 @@ existing Shamir pipeline, everything batched and jit-resident:
   config's train-fold (H, g, dev) AND held-out deviance/accuracy come out
   of a single streaming launch; no per-fold repacking of X ever happens.
 * **one protocol launch per phase per round** — the (C, S)-leading summary
-  tree goes through ``SecureAggregator.secure_round_multiconfig``: one
+  tree goes through ``SecureCollective.secure_round_multiconfig``: one
   encode+share launch over the C*S flat slices, one exact uint64
   reduction over the institution axis per config, one Lagrange+CRT reveal
   of the C global aggregates.  Held-out metrics ride in the same protected
@@ -53,15 +53,14 @@ from ..core.batched_summaries import (
     batched_cv_summaries,
     pack_partitions,
 )
+from ..core.collective import SecureCollective, declassify_sum
 from ..core.newton import (
-    _iteration_bytes,
     newton_step,
     prox_newton_step,
     regularized_objective,
     should_stop,
 )
 from ..core.scanfit import scan_rounds
-from ..core.secure_agg import SecureAggregator, declassify_sum
 from ..obs import metrics as _metrics
 from ..obs.trace import traced as _traced
 from .folds import assign_folds, pack_fold_ids
@@ -91,7 +90,7 @@ def _batched_update(betas, H, g, lams, l1: float):
 )
 def _cv_sweep_block(betas, obj_prev, converged, iters, vdev, vcorr, vcnt,
                     key, round_base, X, X32, y, counts, fold_ids, fold_of,
-                    lams, agg: SecureAggregator, protect: str, l1: float,
+                    lams, agg: SecureCollective, protect: str, l1: float,
                     tol: float, interpret: bool,
                     points: tuple[int, ...] | None,
                     summaries_backend: str, num_rounds: int,
@@ -113,7 +112,7 @@ def _cv_sweep_block(betas, obj_prev, converged, iters, vdev, vcorr, vcnt,
 
     def round_fn(carry):
         betas, obj_prev, converged, iters, vdev, vcorr, vcnt, slot = carry
-        kr = jax.random.fold_in(key, slot)
+        kr = agg.round_key(key, slot)
         sm = batched_cv_summaries(
             betas, packed, fold_ids, fold_of,
             backend=summaries_backend, interpret=interpret,
@@ -245,7 +244,7 @@ class PathDriver:
     arrays — that dict IS the mid-path checkpoint.
     """
 
-    def __init__(self, settings: PathSettings, agg: SecureAggregator):
+    def __init__(self, settings: PathSettings, agg: SecureCollective):
         if agg.backend != "pallas":
             raise ValueError(
                 "the selection sweep requires the pallas backend (the flat "
@@ -341,8 +340,8 @@ class PathDriver:
                 betas0 = np.zeros((len(lam_idx) * K, d))
             cfg_rows = len(lam_idx) * K
 
-        bytes_per_round = _iteration_bytes(
-            d, packed.num_institutions, s.protect, self.agg,
+        bytes_per_round = self.agg.round_bytes(
+            d, packed.num_institutions, s.protect,
             include_count=True, num_live_centers=num_live_centers,
             num_configs=cfg_rows, extra_scalars=3,
         )
@@ -486,7 +485,7 @@ def secure_cv_path(
     num_folds: int = 5,
     l1: float = 0.0,
     protect: str = "gradient",
-    aggregator: SecureAggregator | None = None,
+    aggregator: SecureCollective | None = None,
     tol: float = 1e-10,
     seed: int = 0,
     fold_seed: int = 0,
@@ -513,7 +512,7 @@ def secure_cv_path(
         rounds_per_sync=rounds_per_sync, max_rounds=max_rounds,
         warm_start=warm_start, refit=refit, seed=seed, fold_seed=fold_seed,
     )
-    agg = aggregator or SecureAggregator(backend="pallas")
+    agg = aggregator or SecureCollective(backend="pallas")
     driver = PathDriver(settings, agg)
     fold_parts = [
         assign_folds(Xj.shape[0], num_folds, j, fold_seed)

@@ -137,6 +137,57 @@ def test_host_sync_lint_requires_exactly_one_marked_site():
                for f in rep.errors())
 
 
+# -- collective boundary-ownership lint ------------------------------------
+
+
+def test_collective_sites_lint_clean_on_repo_tree():
+    """The real package: every boundary call lives in an exempt file."""
+    from repro.analysis.lints import lint_collective_sites
+
+    rep = lint_collective_sites()
+    assert rep.ok, rep.format(verbose=True)
+
+
+def test_collective_sites_lint_flags_private_chain():
+    """A driver growing its own protect -> reveal chain is an error;
+    the same calls inside core/collective.py are the sanctioned owner."""
+    from repro.analysis.lints import lint_collective_sites
+
+    rogue = (
+        "from repro.core.collective import _protect_flat, _reveal_flat\n"
+        "def my_round(key, buf, scheme, frac_bits, rows, pts):\n"
+        "    shares = _protect_flat(key, buf, scheme, frac_bits, rows)\n"
+        "    return _reveal_flat(shares, scheme, frac_bits, pts)\n"
+    )
+    rep = lint_collective_sites(modules={"core/rogue.py": rogue})
+    errs = rep.errors()
+    assert len(errs) == 2
+    assert all("outside core/collective.py" in f.message for f in errs)
+    # identical source housed at the owner path is clean
+    rep2 = lint_collective_sites(modules={"core/collective.py": rogue})
+    assert rep2.ok
+
+
+def test_collective_sites_lint_allows_imports_and_attributes():
+    """Re-exports and attribute access don't build a chain — only calls
+    (including method-style ``mod._reveal_flat(...)``) are flagged."""
+    from repro.analysis.lints import lint_collective_sites
+
+    compat = (
+        "from .collective import _reveal_flat, _protect_flat\n"
+        "SITES = ('_reveal_flat', '_distributed_reveal')\n"
+        "handle = _reveal_flat\n"
+    )
+    rep = lint_collective_sites(modules={"core/compat.py": compat})
+    assert rep.ok
+    attr_call = (
+        "from repro.core import collective\n"
+        "out = collective._reveal_flat(b, s, f, p)\n"
+    )
+    rep2 = lint_collective_sites(modules={"selection/peek.py": attr_call})
+    assert not rep2.ok
+
+
 # -- stopping-rule host twins ----------------------------------------------
 
 

@@ -1,0 +1,94 @@
+"""results/show.py dispatch: the one renderer for every result artifact.
+
+The script dispatches on content — span JSONL run ledgers, BENCH_*.json
+row tables, roofline dicts — and must degrade gracefully on a broken
+artifact (one ``error:`` line, nonzero exit, remaining files still
+rendered) because it is pointed at whole results/ globs.
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_SHOW_PY = pathlib.Path(__file__).resolve().parents[1] / "results" / "show.py"
+
+
+@pytest.fixture(scope="module")
+def show():
+    spec = importlib.util.spec_from_file_location("results_show", _SHOW_PY)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_span_ledger_dispatch(show, tmp_path, capsys):
+    """*.jsonl -> per-kind summary table + slowest spans."""
+    ledger = tmp_path / "run.jsonl"
+    spans = [
+        {"kind": "secure_round", "name": "round", "t0": 0.0, "dur": 0.25},
+        {"kind": "secure_round", "name": "round", "t0": 0.3, "dur": 0.05},
+        {"kind": "protect", "name": "protect", "t0": 0.0, "dur": 0.01,
+         "attrs": {"backend": "pallas"}},
+    ]
+    ledger.write_text("".join(json.dumps(s) + "\n" for s in spans))
+    assert show.main([str(ledger)]) == 0
+    out = capsys.readouterr().out
+    assert f"== {ledger}" in out
+    assert "secure_round" in out and "protect" in out
+    assert "slowest spans:" in out
+    assert "backend=pallas" in out
+
+
+def test_bench_rows_dispatch(show, tmp_path, capsys):
+    """A JSON list -> one aligned line per row, label column first."""
+    bench = tmp_path / "BENCH_toy.json"
+    bench.write_text(json.dumps([
+        {"label": "fused", "seconds": 0.034, "bytes_transmitted": 98304},
+        {"label": "loop", "seconds": 0.101, "bytes_transmitted": 98304,
+         "trace": [1.0, 2.0]},  # list-valued columns are elided
+    ]))
+    assert show.main([str(bench)]) == 0
+    out = capsys.readouterr().out
+    assert "fused" in out and "seconds=0.034" in out
+    assert "loop" in out and "trace" not in out
+
+
+def test_roofline_dispatch(show, tmp_path, capsys):
+    """A dict with hlo_analysis -> the roofline one-liner + buckets."""
+    roof = tmp_path / "roofline.json"
+    roof.write_text(json.dumps({
+        "arch": "toy", "shape": "d128", "variant": "fused",
+        "hlo_analysis": {
+            "bytes_per_device": 1e9, "flops_per_device": 1e12,
+            "collective_bytes_per_device": {"psum": 1e6},
+            "top_byte_buckets": [{"bytes": 5e8, "bucket": "shares"}],
+        },
+        "memory": {"temp_bytes_per_device": 2 ** 30},
+    }))
+    assert show.main([str(roof)]) == 0
+    out = capsys.readouterr().out
+    assert "toy d128 [fused]" in out
+    assert "shares" in out
+
+
+def test_plain_dict_falls_back_to_json(show, tmp_path, capsys):
+    other = tmp_path / "misc.json"
+    other.write_text(json.dumps({"answer": 42}))
+    assert show.main([str(other)]) == 0
+    assert '"answer": 42' in capsys.readouterr().out
+
+
+def test_malformed_file_is_one_error_line_not_a_crash(show, tmp_path,
+                                                      capsys):
+    """Broken artifacts: error line + exit 1, later files still render."""
+    bad = tmp_path / "BENCH_broken.json"
+    bad.write_text("{not json")
+    missing = tmp_path / "never_written.jsonl"
+    good = tmp_path / "BENCH_ok.json"
+    good.write_text(json.dumps([{"label": "row", "v": 1}]))
+    assert show.main([str(bad), str(missing), str(good)]) == 1
+    out = capsys.readouterr().out
+    assert f"error: {bad}" in out
+    assert f"error: {missing}" in out
+    assert "row" in out  # the good file after the broken ones rendered
